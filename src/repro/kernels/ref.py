@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x, w_gate, w_up, w_down, activation: str = "swiglu"):
+    """Grouped expert FFN.
+    x: (S, T, d); w_gate/w_up: (S, d, F); w_down: (S, F, d) -> (S, T, d)."""
+    if activation == "swiglu":
+        g = jnp.einsum("std,sdf->stf", x, w_gate.astype(x.dtype))
+        u = jnp.einsum("std,sdf->stf", x, w_up.astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("std,sdf->stf", x, w_up.astype(x.dtype))
+        h = (jax.nn.gelu(h.astype(jnp.float32)) if activation == "gelu"
+             else jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("stf,sfd->std", h, w_down.astype(x.dtype))
+
+
+def histogram_ref(idx, num_classes: int):
+    """idx: (N,) int32 -> counts (num_classes,) int32."""
+    return jnp.zeros((num_classes,), jnp.int32).at[idx].add(
+        jnp.ones_like(idx))
+
+
+def rg_lru_ref(a, b, h0):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t.
+    a, b: (B, S, D) f32; h0: (B, D) f32. Returns (h_all (B,S,D), h_last)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    h_last, hs = jax.lax.scan(step, h0,
+                              (jnp.swapaxes(a, 0, 1), jnp.swapaxes(b, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1), h_last

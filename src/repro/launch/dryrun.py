@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init); 512 fake CPU devices back the production
+meshes. Nothing is executed — steps are lowered from ShapeDtypeStructs
+(no allocation) and compiled; we record memory_analysis / cost_analysis /
+collective bytes for EXPERIMENTS.md (Dry-run + Roofline sections).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun ... --out experiments/dryrun
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.registry import ASSIGNED_ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_cache, abstract_opt_state,
+                                abstract_params, input_specs, plan_args,
+                                runtime_for)
+from repro.roofline import analyze, save_report
+from repro.train.steps import (make_decode_step, make_prefill_step,
+                               make_train_step)
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> str:
+    """Combination-level skips, all documented in DESIGN.md Sec 4."""
+    return ""        # every assigned combo runs (windowed decode for dense)
+
+
+def lower_one(cfg: ModelConfig, shape: InputShape, mesh, *,
+              use_kernel: bool = False, fsdp: bool = True,
+              donate: bool = True, remat: bool = False,
+              microbatches: int = 1, expert_tp: bool = False,
+              train_dtype: str = "float32"):
+    """Returns (lowered, compiled, elapsed_s) for one combination."""
+    rt = runtime_for(cfg, mesh, shape, use_kernel=use_kernel,
+                     decode_expert_tp=expert_tp)
+    params, pspecs = abstract_params(cfg, mesh, fsdp=fsdp,
+                                     expert_tp=expert_tp)
+    plan = plan_args(cfg, rt.ep_ranks)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            import jax.numpy as jnp
+            params, pspecs = abstract_params(
+                cfg, mesh, dtype=jnp.dtype(train_dtype), fsdp=fsdp)
+            opt = abstract_opt_state(params, pspecs, mesh)
+            step = make_train_step(cfg, rt, remat=remat,
+                                   microbatches=microbatches)
+            fn = jax.jit(partial(step, plan=plan),
+                         donate_argnums=(0, 1) if donate else ())
+            lowered = fn.lower(params, opt, input_specs(cfg, shape, mesh))
+        elif shape.kind == "prefill":
+            cache = abstract_cache(cfg, rt, shape, mesh)
+            step = make_prefill_step(cfg, rt)
+            fn = jax.jit(partial(step, plan=plan),
+                         donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(params, input_specs(cfg, shape, mesh), cache)
+        else:  # decode
+            cache = abstract_cache(cfg, rt, shape, mesh)
+            step = make_decode_step(cfg, rt)
+            cache_len = shape.seq_len - 1
+            fn = jax.jit(lambda p, t, c: step(p, t, c, cache_len, plan),
+                         donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(params, input_specs(cfg, shape, mesh)["tokens"],
+                               cache)
+        compiled = lowered.compile()
+    return lowered, compiled, time.time() - t0
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+              use_kernel: bool = False, fsdp: bool = True,
+              tag: str = "", remat: bool = False,
+              microbatches: int = 1, pad_vocab: int = 0,
+              expert_tp: bool = False, train_dtype: str = "float32") -> dict:
+    cfg = get_config(arch)
+    if pad_vocab:
+        # Megatron-style vocab padding: round the vocab up so the
+        # embedding/LM-head shard evenly over the model axis (otherwise an
+        # odd vocab like minicpm's 122753 replicates and the logits psum
+        # dominates the collective term)
+        import dataclasses as _dc
+        v = (cfg.vocab_size + pad_vocab - 1) // pad_vocab * pad_vocab
+        cfg = _dc.replace(cfg, vocab_size=v)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    lowered, compiled, dt = lower_one(cfg, shape, mesh,
+                                      use_kernel=use_kernel, fsdp=fsdp,
+                                      remat=remat, microbatches=microbatches,
+                                      expert_tp=expert_tp,
+                                      train_dtype=train_dtype)
+    rep = analyze(arch, shape, mesh_name, chips, compiled, cfg=cfg)
+    row = rep.row()
+    row.update(status="ok", compile_s=round(dt, 1))
+    if out_dir:
+        suffix = f"_{tag}" if tag else ""
+        save_report(f"{out_dir}/{arch}_{shape_name}_{mesh_name}{suffix}.json",
+                    rep)
+        with open(f"{out_dir}/{arch}_{shape_name}_{mesh_name}{suffix}.json",
+                  "r+") as f:
+            d = json.load(f)
+            d.update(status="ok", compile_s=round(dt, 1))
+            f.seek(0)
+            json.dump(d, f, indent=1)
+            f.truncate()
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--pad-vocab", type=int, default=0,
+                    help="round vocab up to a multiple (Megatron-style)")
+    ap.add_argument("--expert-tp", action="store_true",
+                    help="2D expert sharding (EP x f-TP) for decode")
+    ap.add_argument("--train-dtype", default="float32",
+                    help="parameter dtype for train lowering "
+                         "(bfloat16 halves ZeRO gather bytes)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            try:
+                row = run_combo(arch, shape, args.multi_pod, args.out,
+                                use_kernel=args.use_kernel,
+                                fsdp=not args.no_fsdp, tag=args.tag,
+                                remat=args.remat,
+                                microbatches=args.microbatches,
+                                pad_vocab=args.pad_vocab,
+                                expert_tp=args.expert_tp,
+                                train_dtype=args.train_dtype)
+                if row["status"] == "ok":
+                    print(f"OK   {arch:22s} {shape:12s} {row['mesh']:8s} "
+                          f"compile={row['compile_s']}s "
+                          f"c={row['compute_s']:.2e}s "
+                          f"m={row['memory_s']:.2e}s "
+                          f"n={row['collective_s']:.2e}s "
+                          f"dom={row['dominant']}")
+                else:
+                    print(f"SKIP {arch:22s} {shape:12s} ({row['reason']})")
+            except Exception as e:
+                failures += 1
+                print(f"FAIL {arch:22s} {shape:12s}: "
+                      f"{type(e).__name__}: {e}")
+                traceback.print_exc(limit=3)
+            sys.stdout.flush()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

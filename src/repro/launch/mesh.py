@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+The target is a TPU v5e pod: 256 chips as a (data=16, model=16) mesh, or
+two pods as (pod=2, data=16, model=16). ``model`` carries tensor
+parallelism for attention/dense-FFN/vocab and expert parallelism for MoE;
+``data``/``pod`` shard the batch (and, with fsdp, parameter storage).
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before first
+jax init, and smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def batch_shards(mesh) -> int:
+    n = 1
+    for name in ("pod", "data"):
+        if name in mesh.axis_names:
+            n *= mesh.shape[name]
+    return n

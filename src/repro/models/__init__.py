@@ -1,0 +1,2 @@
+"""Model definitions. Import submodules directly (repro.models.transformer
+etc.) — no eager re-exports, to keep the import graph acyclic."""

@@ -1,0 +1,110 @@
+"""Griffin / RecurrentGemma [arXiv:2402.19427] — RG-LRU recurrent blocks
+interleaved with local (sliding-window) attention at a 1:2 ratio.
+
+Recurrent block:  x -> (gate branch: linear+gelu) * (main branch:
+linear -> temporal conv1d(4) -> RG-LRU) -> out projection.
+
+RG-LRU:  r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+         a_t = exp(c * softplus(Lambda) * (-r_t))         (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The scan over time uses ``jax.lax.associative_scan`` on (a, b) pairs —
+the TPU-native parallel-prefix adaptation of the paper's linear-scan CUDA
+kernel (log-depth, MXU/VPU friendly) — with an explicit carried state for
+streaming decode.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, init_dense, truncated_normal_init
+
+CONV_WIDTH = 4
+RGLRU_C = 8.0
+
+
+def init_recurrent_block(key, cfg: ModelConfig):
+    d, dr = cfg.d_model, cfg.rnn_width or cfg.d_model
+    keys = jax.random.split(key, 6)
+    return {
+        "w_gate": init_dense(keys[0], d, dr),
+        "w_main": init_dense(keys[1], d, dr),
+        "conv_w": truncated_normal_init(keys[2], (CONV_WIDTH, dr), 0.1),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_a": init_dense(keys[3], dr, dr),
+        "w_x": init_dense(keys[4], dr, dr),
+        "lam": truncated_normal_init(jax.random.fold_in(key, 9), (dr,), 0.5) + 4.0,
+        "w_out": init_dense(keys[5], dr, d),
+    }
+
+
+def _causal_conv(params, x, conv_state):
+    """Depthwise causal conv1d(width=4). x: (B,S,dr); conv_state: (B,W-1,dr)."""
+    w = params["conv_w"].astype(x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    out = sum(xp[:, i:i + S, :] * w[i] for i in range(CONV_WIDTH))
+    new_state = xp[:, -(CONV_WIDTH - 1):, :]
+    return out + params["conv_b"].astype(x.dtype), new_state
+
+
+def rg_lru(params, x, h0):
+    """x: (B,S,dr); h0: (B,dr) float32. Returns (y, h_last)."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(dense(params["w_a"], x).astype(f32))
+    i = jax.nn.sigmoid(dense(params["w_x"], x).astype(f32))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"].astype(f32)) * r  # (B,S,dr)
+    a = jnp.exp(log_a)
+    gated = i * x.astype(f32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan on (a, b):
+    #   (a2, b2) . (a1, b1) = (a1*a2, a2*b1 + b2)
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    # fold initial state into the first step
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(f32))
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(params, x, h0):
+    """Single-token step. x: (B,1,dr); h0: (B,dr)."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(dense(params["w_a"], x).astype(f32))[:, 0]
+    i = jax.nn.sigmoid(dense(params["w_x"], x).astype(f32))[:, 0]
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"].astype(f32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * x[:, 0].astype(f32))
+    h = a * h0.astype(f32) + b
+    return h[:, None].astype(x.dtype), h
+
+
+def recurrent_block(params, cfg: ModelConfig, x, state) -> Tuple[jnp.ndarray, dict]:
+    """state: {"h": (B,dr) f32, "conv": (B,W-1,dr)}."""
+    gate = jax.nn.gelu(dense(params["w_gate"], x))
+    main = dense(params["w_main"], x)
+    main, new_conv = _causal_conv(params, main, state["conv"])
+    if x.shape[1] == 1:
+        y, new_h = rg_lru_step(params, main, state["h"])
+    else:
+        y, new_h = rg_lru(params, main, state["h"])
+    out = dense(params["w_out"], y * gate)
+    return out, {"h": new_h, "conv": new_conv}
+
+
+def init_recurrent_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    dr = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, dr), dtype),
+    }

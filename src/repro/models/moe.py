@@ -1,0 +1,85 @@
+"""MoE FFN block: router + (shared experts | dense residual) + routed experts.
+
+Two execution paths share one parameter layout:
+
+* ``moe_ffn_dense`` — reference path: every expert computed on every token,
+  combined by gates. Exact (no capacity drops); used on single-device smoke
+  tests and as the oracle for the distributed path and the Pallas kernel.
+* ``moe_ffn_ep`` — the production expert-parallel path via
+  ``repro.moe.dispatch.ep_moe_ffn`` (called inside shard_map).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ffn, init_ffn, truncated_normal_init
+from repro.moe.router import RouterOutput, init_router, route
+
+
+def init_moe_block(key, cfg: ModelConfig):
+    moe = cfg.moe
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    import math
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(moe.d_ff_expert)
+    E = moe.num_experts
+
+    def ew(k, shape, scale):
+        return truncated_normal_init(k, shape, scale)
+
+    ks = jax.random.split(keys[0], 3)
+    params = {
+        "router": init_router(keys[1], d, moe),
+        "experts": {
+            "w_gate": ew(ks[0], (E, d, moe.d_ff_expert), scale_in),
+            "w_up": ew(ks[1], (E, d, moe.d_ff_expert), scale_in),
+            "w_down": ew(ks[2], (E, moe.d_ff_expert, d), scale_out),
+        },
+    }
+    if moe.num_shared_experts > 0:
+        params["shared"] = init_ffn(
+            keys[2], d, moe.d_ff_expert * moe.num_shared_experts, cfg.activation)
+    if moe.dense_residual:
+        params["dense"] = init_ffn(
+            keys[3], d, moe.d_ff_dense or cfg.d_ff, cfg.activation)
+    return params
+
+
+def routed_dense(params_experts, router_out: RouterOutput, x, activation: str):
+    """Reference routed computation: all experts on all tokens. x: (T, d)."""
+    we = params_experts
+    if activation == "swiglu":
+        g = jnp.einsum("td,edf->etf", x, we["w_gate"].astype(x.dtype))
+        u = jnp.einsum("td,edf->etf", x, we["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("td,edf->etf", x, we["w_up"].astype(x.dtype))
+        h = jax.nn.gelu(h) if activation == "gelu" else jax.nn.relu(h)
+    y_all = jnp.einsum("etf,efd->etd", h, we["w_down"].astype(x.dtype))  # (E,T,d)
+    E = we["w_gate"].shape[0]
+    # combine: sum_k gate_k * y_all[idx_k]
+    gates_full = jnp.zeros((x.shape[0], E), x.dtype)
+    gates_full = gates_full.at[
+        jnp.arange(x.shape[0])[:, None], router_out.expert_idx
+    ].add(router_out.gates.astype(x.dtype))
+    return jnp.einsum("te,etd->td", gates_full, y_all)
+
+
+def moe_ffn_dense(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, RouterOutput]:
+    """Single-device exact MoE FFN. x: (..., d) -> same shape."""
+    moe = cfg.moe
+    shape = x.shape
+    xt = x.reshape(-1, shape[-1])
+    router_out = route(params["router"], moe, xt)
+    y = routed_dense(params["experts"], router_out, xt, cfg.activation)
+    if "shared" in params:
+        y = y + ffn(params["shared"], xt, cfg.activation)
+    if "dense" in params:
+        y = y + ffn(params["dense"], xt, cfg.activation)
+    return y.reshape(shape), router_out

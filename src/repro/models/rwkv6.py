@@ -1,0 +1,200 @@
+"""RWKV-6 "Finch" [arXiv:2404.05892] — attention-free time-mix with
+data-dependent decay, plus relu^2 channel-mix.
+
+State per layer/head: S in R^{head_dim x head_dim} (plus the token-shift
+buffer x_{t-1}) — O(1) in sequence length, which is why rwkv6 runs the
+long_500k decode shape natively.
+
+Recurrence (per head; diag acts on the key dimension):
+
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+Sequence processing uses a chunked formulation: within a chunk of length C
+the recurrence is expanded with cumulative decay products so the chunk is
+two matmuls (strict-lower-triangular intra-chunk term + inter-chunk state
+term), and a lax.scan carries S across chunks. This is the TPU-native
+adaptation of the CUDA wkv kernel: MXU-sized matmuls instead of a
+per-token scalar loop.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (dense, init_dense, init_rmsnorm, rmsnorm,
+                                 truncated_normal_init)
+
+LORA_DIM = 64
+CHUNK = 32
+# Max per-step decay rate: w_t = exp(-rate), rate clipped to <= MAX_RATE so the
+# intra-chunk rescaling exp(-cum) stays < exp(MAX_RATE*CHUNK) ~ 3e12 (f32-safe).
+MAX_RATE = 0.9
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H, hd = cfg.num_heads, cfg.head_dim
+    keys = jax.random.split(key, 11)
+    return {
+        # data-dependent token-shift (ddlerp) base mixes + low-rank modulators
+        "mu": truncated_normal_init(keys[0], (5, d), 0.02),
+        "lora_a": truncated_normal_init(keys[1], (d, LORA_DIM * 5), 0.01),
+        "lora_b": truncated_normal_init(keys[2], (5, LORA_DIM, d), 0.01),
+        # projections
+        "w_r": init_dense(keys[3], d, H * hd),
+        "w_k": init_dense(keys[4], d, H * hd),
+        "w_v": init_dense(keys[5], d, H * hd),
+        "w_g": init_dense(keys[6], d, H * hd),
+        "w_o": init_dense(keys[7], H * hd, d),
+        # data-dependent decay rate: softplus-ish via exp(base + lora)
+        "decay_base": jnp.full((H * hd,), -6.0, jnp.float32),
+        "decay_lora_a": truncated_normal_init(keys[8], (d, LORA_DIM), 0.01),
+        "decay_lora_b": truncated_normal_init(keys[9], (LORA_DIM, H * hd), 0.01),
+        "bonus": truncated_normal_init(keys[10], (H, hd), 0.5),
+        "ln_out": init_rmsnorm(H * hd),
+    }
+
+
+def _token_shift(params, x, x_prev):
+    """x: (B,S,d); x_prev: (B,d) = last token of the previous segment.
+    Returns 5 mixed streams (r,k,v,w,g) and the new shift state."""
+    B, S, d = x.shape
+    shifted = jnp.concatenate([x_prev[:, None, :].astype(x.dtype), x[:, :-1, :]],
+                              axis=1)
+    delta = shifted - x
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", x, params["lora_a"].astype(x.dtype)))
+    lora = lora.reshape(B, S, 5, LORA_DIM)
+    mod = jnp.einsum("bsir,ird->bsid", lora, params["lora_b"].astype(x.dtype))
+    mix = params["mu"].astype(x.dtype)[None, None] + mod          # (B,S,5,d)
+    streams = x[:, :, None, :] + delta[:, :, None, :] * mix
+    return streams, x[:, -1, :]
+
+
+def _log_decay(params, xw):
+    """Per-channel log decay (negative), clamped for chunk stability."""
+    lw = jnp.tanh(xw @ params["decay_lora_a"].astype(xw.dtype)) \
+        @ params["decay_lora_b"].astype(xw.dtype)
+    rate = jnp.exp(jnp.clip(
+        params["decay_base"].astype(jnp.float32) + lw.astype(jnp.float32),
+        -20.0, jnp.log(MAX_RATE)))
+    return -rate                                                  # logw in [-0.9, 0)
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = CHUNK):
+    """r,k,v: (B,S,H,hd); logw: (B,S,H,hd) negative log-decay; u: (H,hd);
+    state: (B,H,hd,hd) float32.  Returns (y: (B,S,H,hd), new_state)."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, max(S, 1))
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = zp(r), zp(k), zp(v), zp(logw)  # logw pad 0 => w=1
+    Sp = S + pad
+    n = Sp // chunk
+    f32 = jnp.float32
+    shape_c = (B, n, chunk, H, hd)
+    rc = r.reshape(shape_c).astype(f32)
+    kc = k.reshape(shape_c).astype(f32)
+    vc = v.reshape(shape_c).astype(f32)
+    lw = logw.reshape(shape_c).astype(f32)
+
+    cum = jnp.cumsum(lw, axis=2)                   # inclusive: cum[t]=sum_{j<=t}
+    dec_in = jnp.exp(cum - lw)                     # exp(cum[t-1]) <= 1
+    dec_all = jnp.exp(cum[:, :, -1])               # full-chunk decay (B,n,H,hd)
+    dec_out = jnp.exp(cum[:, :, -1:] - cum)        # prod_{j>s} w_j <= 1
+    k_resc = kc * jnp.exp(-cum)                    # k_s * exp(-cum[s]) (bounded, see MAX_RATE)
+
+    def chunk_step(S_state, inputs):
+        rci, kci, vci, dec_ini, dec_alli, dec_outi, k_ri = inputs
+        r_sc = rci * dec_ini                                # r_t exp(cum[t-1])
+        a = jnp.einsum("thd,shd->hts", r_sc, k_ri)          # (H,C,C)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        a = jnp.where(tri[None], a, 0.0)
+        y = jnp.einsum("hts,she->the", a, vci)              # intra-chunk history
+        bonus = jnp.einsum("thd,thd->th", rci, kci * u[None].astype(f32))
+        y += bonus[:, :, None] * vci                        # current-token bonus
+        y += jnp.einsum("thd,hde->the", r_sc, S_state)      # inter-chunk state
+        k_state = kci * dec_outi
+        S_new = dec_alli[:, :, None] * S_state + jnp.einsum(
+            "shd,she->hde", k_state, vci)
+        return S_new, y
+
+    def run_batch(state_b, seqs):
+        return jax.lax.scan(chunk_step, state_b, seqs)
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in
+                   (rc, kc, vc, dec_in, dec_all, dec_out, k_resc))
+    new_state, y = jax.vmap(run_batch, in_axes=(0, 1), out_axes=(0, 1))(
+        state.astype(f32), inputs)
+    y = jnp.moveaxis(y, 1, 0).reshape(B, Sp, H, hd)[:, :S]
+    return y.astype(r.dtype), new_state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token decode step. r,k,v,logw: (B,H,hd); state: (B,H,hd,hd)."""
+    f32 = jnp.float32
+    r, k, v, logw = (a.astype(f32) for a in (r, k, v, logw))
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    y = jnp.einsum("bhd,bhde->bhe", r, state + u[None, :, :, None].astype(f32) * kv)
+    new_state = jnp.exp(logw)[..., None] * state + kv
+    return y, new_state
+
+
+def time_mix(params, cfg: ModelConfig, x, state) -> Tuple[jnp.ndarray, dict]:
+    """state: {"shift_tm": (B,d), "wkv": (B,H,hd,hd)}."""
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    streams, new_shift = _token_shift(params, x, state["shift_tm"])
+    xr, xk, xv, xw, xg = [streams[:, :, i] for i in range(5)]
+    r = dense(params["w_r"], xr).reshape(B, S, H, hd)
+    k = dense(params["w_k"], xk).reshape(B, S, H, hd)
+    v = dense(params["w_v"], xv).reshape(B, S, H, hd)
+    g = jax.nn.silu(dense(params["w_g"], xg))
+    logw = _log_decay(params, xw).reshape(B, S, H, hd)
+    if S == 1:
+        y, new_wkv = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0],
+                              params["bonus"], state["wkv"])
+        y = y[:, None].astype(x.dtype)
+    else:
+        y, new_wkv = wkv_chunked(r, k, v, logw, params["bonus"], state["wkv"])
+    y = rmsnorm(params["ln_out"], y.reshape(B, S, H * hd).astype(x.dtype))
+    out = dense(params["w_o"], y * g)
+    return out, {"shift_tm": new_shift, "wkv": new_wkv}
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "mu": truncated_normal_init(k1, (2, d), 0.02),
+        "w_k": init_dense(k2, d, cfg.d_ff),
+        "w_v": init_dense(k3, cfg.d_ff, d),
+        "w_r": init_dense(k4, d, d),
+    }
+
+
+def channel_mix(params, x, x_prev):
+    """relu^2 channel mix with token shift. x_prev: (B,d)."""
+    shifted = jnp.concatenate([x_prev[:, None, :].astype(x.dtype), x[:, :-1, :]],
+                              axis=1)
+    mu = params["mu"].astype(x.dtype)
+    xk = x + (shifted - x) * mu[0]
+    xr = x + (shifted - x) * mu[1]
+    h = jnp.square(jax.nn.relu(dense(params["w_k"], xk)))
+    rgate = jax.nn.sigmoid(dense(params["w_r"], xr))
+    return rgate * dense(params["w_v"], h), x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """Per-layer recurrent state (stacked over layers by the caller)."""
+    return {
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.head_dim),
+                         jnp.float32),
+    }

@@ -1,0 +1,311 @@
+"""Expert-parallel MoE dispatch with placement-aware duplication.
+
+Runs inside ``shard_map`` over the ``model`` mesh axis (EP ranks = R).
+Every rank hosts ``E_loc = E/R`` home experts plus ``D`` replica slots.
+
+Pipeline per rank (T = local tokens, S = R * n_slots global slots):
+
+  1. (optional) fill the replica pool: each source rank contributes ONE
+     expert's weights; ``all_gather`` makes the pool of R candidates
+     available everywhere (paper Sec 5 transfer model — this collective is
+     the duplication overhead and is visible in the roofline).
+  2. route tokens (true router or an external predicted assignment).
+  3. pick a replica per (token, k): round-robin over ``n_replicas[e]``.
+  4. capacity-dispatch: scatter tokens into a (S * C, d) send buffer,
+     ``all_to_all`` over the model axis.
+  5. grouped expert FFN on the received (n_slots, R * C, d) block
+     (pure-jnp einsum or the Pallas ``moe_gemm`` kernel).
+  6. reverse ``all_to_all``; weighted combine with router gates.
+
+Token-to-Expert predicted mode dispatches on *predicted* assignments first
+(step 2 uses the prediction; overlappable with attention upstream), then
+runs a second, capacity-reduced correction round for mispredicted pairs —
+communication grows with the error rate exactly as the paper models.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.placement import PlacementPlan, plan_dims
+from repro.moe.router import RouterOutput
+
+
+class MoEStats(NamedTuple):
+    expert_counts: jnp.ndarray   # (E,) tokens routed per expert (global)
+    slot_counts: jnp.ndarray     # (S,) tokens per global slot (global)
+    dropped: jnp.ndarray         # scalar: tokens dropped by capacity
+    aux_loss: jnp.ndarray
+    z_loss: jnp.ndarray
+
+
+def capacity(t_local: int, top_k: int, num_slots_global: int, factor: float,
+             multiple: int = 8) -> int:
+    c = math.ceil(t_local * top_k / num_slots_global * factor)
+    return max(multiple, math.ceil(c / multiple) * multiple)
+
+
+def _positions_in_slot(gslot: jnp.ndarray, num_slots: int) -> jnp.ndarray:
+    """Rank of each element within its slot group (one-hot cumsum trick).
+    gslot: (N,) int32 in [0, num_slots). Returns (N,) int32."""
+    oh = jax.nn.one_hot(gslot, num_slots, dtype=jnp.int32)      # (N, S)
+    pos = jnp.cumsum(oh, axis=0) - 1
+    return jnp.take_along_axis(pos, gslot[:, None], axis=1)[:, 0]
+
+
+def choose_replica(plan: PlacementPlan, expert: jnp.ndarray,
+                   salt: jnp.ndarray) -> jnp.ndarray:
+    """Round-robin replica choice. expert, salt: (N,). Returns global slot."""
+    n_rep = plan.n_replicas[expert]                              # (N,)
+    choice = salt % jnp.maximum(n_rep, 1)
+    return plan.replica_table[expert, jnp.minimum(choice, plan.max_copies - 1)]
+
+
+def gather_replica_pool(expert_weights: dict, plan: PlacementPlan,
+                        axis_name: str) -> dict:
+    """Step 1: every rank contributes one expert; all_gather the pool.
+
+    expert_weights: {name: (E_loc, ...)}. Returns {name: (R, ...)} pool.
+    """
+    rank = jax.lax.axis_index(axis_name)
+    e_loc = next(iter(expert_weights.values())).shape[0]
+    local_idx = plan.pool_expert[rank] % e_loc                  # home expert -> local
+    contrib = {k: w[local_idx] for k, w in expert_weights.items()}
+    return {k: jax.lax.all_gather(v, axis_name, axis=0) for k, v in contrib.items()}
+
+
+def _slot_weights(expert_weights: dict, pool: Optional[dict],
+                  plan: PlacementPlan, dup_slots: int, axis_name: str) -> dict:
+    """Per-slot weight stack: home experts + replica slots from the pool."""
+    if dup_slots == 0 or pool is None:
+        return expert_weights
+    rank = jax.lax.axis_index(axis_name)
+    sel = plan.pool_sel[rank, :dup_slots]                       # (D,) pool entries
+    out = {}
+    for k, w in expert_weights.items():
+        out[k] = jnp.concatenate([w, pool[k][sel]], axis=0)     # (n_slots, ...)
+    return out
+
+
+def grouped_ffn(slot_w: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """x: (n_slots, T_s, d) -> (n_slots, T_s, d). Pure-jnp grouped expert FFN
+    (the Pallas `moe_gemm` kernel implements the same contraction)."""
+    if activation == "swiglu":
+        g = jnp.einsum("std,sdf->stf", x, slot_w["w_gate"].astype(x.dtype))
+        u = jnp.einsum("std,sdf->stf", x, slot_w["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("std,sdf->stf", x, slot_w["w_up"].astype(x.dtype))
+        h = jax.nn.gelu(h) if activation == "gelu" else jax.nn.relu(h)
+    return jnp.einsum("stf,sfd->std", h, slot_w["w_down"].astype(x.dtype))
+
+
+def _dispatch_round(x, gslot, valid, *, num_slots: int, ranks: int, cap: int,
+                    axis_name: str, slot_w: dict, activation: str,
+                    use_kernel: bool = False):
+    """One dispatch -> FFN -> combine round.
+
+    x: (T, d); gslot, valid: (N,) flattened (token, k) assignments with
+    token index = n // K. Returns y_flat: (N, d) per-assignment outputs
+    (zeros where dropped/invalid) plus per-slot counts and drop count.
+    """
+    T, d = x.shape
+    N = gslot.shape[0]
+    K = N // T
+    S = ranks * num_slots
+    token_of = jnp.arange(N, dtype=jnp.int32) // K
+
+    gslot = jnp.where(valid, gslot, S)              # invalid -> overflow class
+    pos = _positions_in_slot(gslot, S + 1)          # invalid don't eat capacity
+    in_cap = (pos < cap) & valid
+    dest = jnp.where(in_cap, gslot * cap + pos, S * cap)
+
+    send = jnp.zeros((S * cap + 1, d), x.dtype).at[dest].set(
+        x[token_of], mode="drop")[:-1]
+    send = send.reshape(ranks, num_slots * cap, d)
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+    # recv: (R_src, n_slots * cap, d) -> (n_slots, R_src * cap, d)
+    recv = recv.reshape(ranks, num_slots, cap, d).transpose(1, 0, 2, 3) \
+               .reshape(num_slots, ranks * cap, d)
+
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        y_slots = kernel_ops.moe_gemm(recv, slot_w, activation)
+    else:
+        y_slots = grouped_ffn(slot_w, recv, activation)
+
+    y_back = y_slots.reshape(num_slots, ranks, cap, d).transpose(1, 0, 2, 3) \
+                    .reshape(ranks, num_slots * cap, d)
+    y_recv = jax.lax.all_to_all(y_back, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False).reshape(S * cap, d)
+    y_flat = jnp.where(in_cap[:, None],
+                       y_recv[jnp.minimum(dest, S * cap - 1)], 0.0)
+    slot_counts = jnp.zeros((S,), jnp.int32).at[
+        jnp.minimum(gslot, S - 1)].add(in_cap.astype(jnp.int32))
+    dropped = (valid & ~in_cap).sum()
+    return y_flat, slot_counts, dropped
+
+
+def ep_moe_ffn(
+    x: jnp.ndarray,                      # (T, d) local tokens
+    router_out: RouterOutput,            # from repro.moe.router.route
+    expert_weights: dict,                # {w_gate/w_up/w_down: (E_loc, ...)}
+    plan: PlacementPlan,
+    moe: MoEConfig,
+    *,
+    axis_name: str,
+    ep_ranks: int,
+    activation: str = "swiglu",
+    use_duplication: bool = True,
+    predicted_idx: Optional[jnp.ndarray] = None,   # (T, K) predicted experts
+    correction_cap_frac: float = 0.25,
+    use_kernel: bool = False,
+) -> Tuple[jnp.ndarray, MoEStats]:
+    """Placement-aware EP MoE FFN (see module docstring). Returns (y, stats)."""
+    T, d = x.shape
+    K = moe.top_k
+    E = moe.num_experts
+    dup_slots = moe.duplication_slots if use_duplication else 0
+    e_loc, n_slots = plan_dims(E, ep_ranks, dup_slots)
+    S = ep_ranks * n_slots
+    cap = capacity(T, K, S, moe.capacity_factor)
+
+    pool = None
+    if dup_slots > 0:
+        pool = gather_replica_pool(expert_weights, plan, axis_name)
+    slot_w = _slot_weights(expert_weights, pool, plan, dup_slots, axis_name)
+
+    true_idx = router_out.expert_idx                             # (T, K)
+    gates = router_out.gates.astype(x.dtype)                     # (T, K)
+    salt = (jnp.arange(T, dtype=jnp.int32)[:, None] + jnp.arange(K)[None, :])
+    flat = lambda a: a.reshape(-1)
+
+    if predicted_idx is None:
+        gslot = choose_replica(plan, flat(true_idx), flat(salt))
+        valid = jnp.ones((T * K,), bool)
+        y_flat, slot_counts, dropped = _dispatch_round(
+            x, gslot, valid, num_slots=n_slots, ranks=ep_ranks, cap=cap,
+            axis_name=axis_name, slot_w=slot_w, activation=activation,
+            use_kernel=use_kernel)
+    else:
+        # --- Token-to-Expert predicted mode: round 1 on predictions -------
+        pred = predicted_idx.astype(jnp.int32)
+        gslot1 = choose_replica(plan, flat(pred), flat(salt))
+        valid1 = jnp.ones((T * K,), bool)
+        y1, slot_counts, dropped1 = _dispatch_round(
+            x, gslot1, valid1, num_slots=n_slots, ranks=ep_ranks, cap=cap,
+            axis_name=axis_name, slot_w=slot_w, activation=activation,
+            use_kernel=use_kernel)
+        # --- round 2: correction for mispredicted (token, k) pairs --------
+        correct = flat(pred) == flat(true_idx)
+        cap2 = max(8, int(cap * correction_cap_frac))
+        gslot2 = choose_replica(plan, flat(true_idx), flat(salt) + 1)
+        y2, slot_counts2, dropped2 = _dispatch_round(
+            x, gslot2, ~correct, num_slots=n_slots, ranks=ep_ranks, cap=cap2,
+            axis_name=axis_name, slot_w=slot_w, activation=activation,
+            use_kernel=use_kernel)
+        y_flat = jnp.where(correct[:, None], y1, y2)
+        slot_counts = slot_counts + slot_counts2
+        dropped = dropped1 + dropped2   # slight overcount: r1 drops of mispredicted pairs
+
+    y = (y_flat.reshape(T, K, d) * gates[..., None]).sum(axis=1)
+
+    counts = jnp.zeros((E,), jnp.float32).at[flat(true_idx)].add(1.0)
+    stats = MoEStats(
+        expert_counts=jax.lax.psum(counts, axis_name),
+        slot_counts=jax.lax.psum(slot_counts, axis_name),
+        dropped=jax.lax.psum(dropped, axis_name),
+        aux_loss=jax.lax.pmean(router_out.aux_loss, axis_name),
+        z_loss=jax.lax.pmean(router_out.z_loss, axis_name),
+    )
+    return y, stats
+
+
+def ep_moe_ffn_replicated(
+    x: jnp.ndarray,                      # (T, d) — SAME tokens on all EP ranks
+    router_out: RouterOutput,
+    expert_weights: dict,
+    plan: PlacementPlan,
+    moe: MoEConfig,
+    *,
+    axis_name: str,
+    ep_ranks: int,
+    activation: str = "swiglu",
+    use_duplication: bool = True,
+    predicted_idx=None,
+    use_kernel: bool = False,
+    tp_axis: Tuple[str, ...] = (),
+) -> Tuple[jnp.ndarray, MoEStats]:
+    """Decode-path EP dispatch: tokens are replicated over the model axis
+    (decode batches are too small to shard over it). Each rank computes the
+    (token, k) pairs assigned to ITS slots; a psum combines results. The
+    only dispatch communication is the (T, d) psum — appropriate for the
+    latency-critical decode stage (paper Sec 2: balancing is secondary
+    there, but duplication still helps the compute term).
+
+    ``tp_axis``: 2D expert sharding for decode (EXPERIMENTS.md §Perf
+    cycle 2) — expert d_ff is additionally sharded over this mesh axis, so
+    weights stay fully sharded AND resident (no ZeRO re-gather per step).
+    The activation is elementwise in d_ff, so each rank computes its
+    f-shard's partial y and the final psum runs over (tp_axis, ep_axis)."""
+    if predicted_idx is not None:
+        raise NotImplementedError("predicted pre-routing is a prefill feature")
+    T, d = x.shape
+    K = moe.top_k
+    E = moe.num_experts
+    dup_slots = moe.duplication_slots if use_duplication else 0
+    e_loc, n_slots = plan_dims(E, ep_ranks, dup_slots)
+    S = ep_ranks * n_slots
+    cap = capacity(T, K, n_slots, moe.capacity_factor)  # per-rank slot capacity
+
+    pool = None
+    if dup_slots > 0:
+        pool = gather_replica_pool(expert_weights, plan, axis_name)
+    slot_w = _slot_weights(expert_weights, pool, plan, dup_slots, axis_name)
+
+    rank = jax.lax.axis_index(axis_name)
+    flat = lambda a: a.reshape(-1)
+    salt = (jnp.arange(T, dtype=jnp.int32)[:, None] + jnp.arange(K)[None, :])
+    gslot = choose_replica(plan, flat(router_out.expert_idx), flat(salt))
+    mine = (gslot // n_slots) == rank
+    lslot = jnp.where(mine, gslot % n_slots, n_slots)
+    pos = _positions_in_slot(lslot, n_slots + 1)
+    in_cap = (pos < cap) & mine
+    dest = jnp.where(in_cap, lslot * cap + pos, n_slots * cap)
+    token_of = jnp.arange(T * K, dtype=jnp.int32) // K
+
+    xs = jnp.zeros((n_slots * cap + 1, d), x.dtype).at[dest].set(
+        x[token_of], mode="drop")[:-1].reshape(n_slots, cap, d)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        ys = kernel_ops.moe_gemm(xs, slot_w, activation)
+    else:
+        ys = grouped_ffn(slot_w, xs, activation)
+    ys = ys.reshape(n_slots * cap, d)
+    y_flat = jnp.where(in_cap[:, None], ys[jnp.minimum(dest, n_slots * cap - 1)],
+                       0.0)
+    gates = router_out.gates.astype(x.dtype)
+    y = (y_flat.reshape(T, K, d) * gates[..., None]).sum(axis=1)
+    # tp_axis ranks hold d_ff shards: their y's are PARTIAL sums over f;
+    # one psum over (tp, ep) both combines f-partials and slot results.
+    y = jax.lax.psum(y, tuple(tp_axis) + (axis_name,) if tp_axis
+                     else axis_name)
+
+    counts = jnp.zeros((E,), jnp.float32).at[flat(router_out.expert_idx)].add(1.0)
+    slot_counts = jnp.zeros((S,), jnp.int32).at[
+        jnp.minimum(gslot, S - 1)].add(in_cap.astype(jnp.int32))
+    stats = MoEStats(
+        expert_counts=counts,                       # already global (replicated)
+        slot_counts=jax.lax.psum(slot_counts, axis_name),
+        dropped=jax.lax.psum((mine & ~in_cap).sum(), axis_name),
+        aux_loss=router_out.aux_loss,
+        z_loss=router_out.z_loss,
+    )
+    return y, stats

@@ -1,0 +1,47 @@
+"""Top-k MoE router with load-balance auxiliary loss and router z-loss."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import init_dense, truncated_normal_init
+
+
+class RouterOutput(NamedTuple):
+    expert_idx: jnp.ndarray     # (T, K) int32
+    gates: jnp.ndarray          # (T, K) float32 (normalised over K)
+    probs: jnp.ndarray          # (T, E) full softmax (for aux losses / stats)
+    aux_loss: jnp.ndarray       # scalar
+    z_loss: jnp.ndarray         # scalar
+
+
+def init_router(key, d_model: int, moe: MoEConfig):
+    return {"w": truncated_normal_init(key, (d_model, moe.num_experts), 0.02)}
+
+
+def route(params, moe: MoEConfig, x) -> RouterOutput:
+    """x: (T, d) token-major. Returns top-k assignment + losses."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        params["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, moe.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    E = moe.num_experts
+    f = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (expert_idx.size))
+    p_mean = probs.mean(axis=0)
+    aux = E * jnp.sum(f * p_mean) * moe.router_aux_loss
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))) * moe.router_z_loss
+    return RouterOutput(expert_idx.astype(jnp.int32), gates, probs, aux, z)
+
+
+def expert_histogram(expert_idx, num_experts: int):
+    """Token counts per expert. expert_idx: (..., K) -> (E,) float32."""
+    return jnp.zeros((num_experts,), jnp.float32).at[
+        expert_idx.reshape(-1)].add(1.0)

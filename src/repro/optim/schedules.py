@@ -1,0 +1,32 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac=0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, total: int, decay_frac=0.1,
+                 min_frac=0.01):
+    """Warmup -> Stable (constant) -> Decay (last decay_frac of training)."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        dec = base_lr * (min_frac ** t)          # exponential anneal
+        stable = jnp.asarray(base_lr, jnp.float32)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, stable, dec))
+        return out
+    return lr

@@ -1,0 +1,6 @@
+"""Serving runtime: batched prefill/decode with prediction-guided dynamic
+expert duplication in the loop (the paper's end-to-end feature)."""
+from repro.serve.engine import ServeEngine, ServeConfig
+from repro.serve.scheduler import Request, BatchScheduler
+
+__all__ = ["BatchScheduler", "Request", "ServeConfig", "ServeEngine"]

@@ -1,0 +1,213 @@
+"""Serving engine with the paper's predict -> plan -> dispatch pipeline.
+
+Per prediction interval (default: every batch, paper Sec 3.1):
+
+  1. observe per-layer expert histograms from the last batches' router
+     stats (the Distribution-Only predictor's input — a free side-effect
+     of dispatch) and/or run the Token-to-Expert predictor on the incoming
+     batch;
+  2. plan: Algorithm 1 (`duplicate_experts_host`) turns the predicted
+     distribution into a PlacementPlan per MoE layer;
+  3. dispatch: the next prefill executes with the new plan — replicated
+     experts receive their tokens round-robin, balancing per-rank load.
+
+The engine is strategy-agnostic: ``strategy`` selects none / dist_only /
+token_to_expert exactly as in the paper, and `repro.core.gps` can be asked
+which one to use for the deployment's (model, hardware, skew) point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.duplication import duplicate_experts_host
+from repro.core.placement import PlacementPlan, identity_plan, stack_plans
+from repro.core.predictors import DistributionEstimator
+from repro.models.transformer import Runtime, forward, init_cache
+from repro.train.steps import (make_decode_step, make_prefill_replan_step,
+                               make_prefill_step)
+
+
+class _nullcontext:
+    def __enter__(self):
+        return self
+    def __exit__(self, *a):
+        return False
+
+
+@dataclass
+class ServeConfig:
+    strategy: str = "dist_only"       # none | dist_only | token_to_expert
+    predict_interval: int = 1         # batches between re-plans (paper Sec 3.1)
+    dup_slots: int = 1                # replica slots per EP rank
+    max_copies: int = 4               # Algorithm 1 C_max
+    ema: float = 0.9                  # moving-average for the MLE estimator
+    max_len: int = 2048               # KV-cache length for generation
+    in_graph_replan: bool = False     # fuse Algorithm 1 into the prefill
+                                      # step (no host round-trip per batch)
+
+
+class ServeEngine:
+    """Batched prefill+decode with dynamic expert duplication."""
+
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig,
+                 mesh=None, ep_ranks: int = 1, predictor=None):
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.mesh = mesh
+        self.ep_ranks = ep_ranks
+        self.predictor = predictor            # Token-to-Expert model (optional)
+        self.batches_seen = 0
+        self._plan_stack: Optional[PlacementPlan] = None
+        self.history: List[Dict] = []         # per-batch balance telemetry
+
+        use_dup = cfg.is_moe and serve.strategy != "none"
+        dup_slots = serve.dup_slots if use_dup else 0
+        if cfg.is_moe:
+            self.moe_cfg = dataclasses.replace(
+                cfg.moe, duplication_slots=dup_slots,
+                max_copies=serve.max_copies)
+            self.cfg = dataclasses.replace(cfg, moe=self.moe_cfg)
+            self.estimator = DistributionEstimator(
+                cfg.num_layers, cfg.moe.num_experts, ema=serve.ema)
+        else:
+            self.moe_cfg = None
+            self.estimator = None
+
+        self._rt_kw = dict(mesh=mesh, ep=mesh is not None,
+                           ep_ranks=ep_ranks, use_duplication=use_dup)
+        self._prefill = None
+        self._decode = None
+
+    # ------------------------------------------------------------------ plan
+    def _identity_stack(self) -> Optional[PlacementPlan]:
+        if not self.cfg.is_moe:
+            return None
+        m = self.moe_cfg
+        plans = [identity_plan(m.num_experts, self.ep_ranks,
+                               m.duplication_slots, m.max_copies)
+                 for _ in range(self.cfg.num_layers)]
+        return stack_plans(plans)
+
+    def replan(self) -> Optional[PlacementPlan]:
+        """Algorithm 1 per layer from the current distribution estimate."""
+        if not self.cfg.is_moe or self.serve.strategy == "none":
+            return self._identity_stack()
+        m = self.moe_cfg
+        dist = self.estimator.predict()                  # (L, E)
+        plans = []
+        for l in range(self.cfg.num_layers):
+            res = duplicate_experts_host(dist[l], self.ep_ranks,
+                                         m.duplication_slots, m.max_copies)
+            plans.append(res.plan)
+        self._plan_stack = stack_plans(plans)
+        return self._plan_stack
+
+    def _current_plan(self) -> Optional[PlacementPlan]:
+        if self._plan_stack is None:
+            self._plan_stack = self._identity_stack()
+        return self._plan_stack
+
+    def _runtime(self) -> Runtime:
+        return Runtime(**self._rt_kw)
+
+    def _steps(self):
+        """Build + jit the step functions ONCE; plan/predictions are traced
+        arguments so replanning never recompiles."""
+        if self._prefill is None:
+            rt = self._runtime()
+            in_graph = (self.serve.in_graph_replan and self.cfg.is_moe
+                        and self.serve.strategy == "dist_only")
+            builder = (make_prefill_replan_step if in_graph
+                       else make_prefill_step)
+            self._prefill = jax.jit(builder(self.cfg, rt))
+            self._in_graph = in_graph
+            self._decode = jax.jit(make_decode_step(self.cfg, rt),
+                                   static_argnums=(3,))
+        return self._prefill, self._decode
+
+    # --------------------------------------------------------------- predict
+    def _predict_tokens(self, tokens: np.ndarray) -> Optional[jnp.ndarray]:
+        """Token-to-Expert pre-routing: (L, B, S) -> (L, B*S, K) slots."""
+        if self.serve.strategy != "token_to_expert" or self.predictor is None:
+            return None
+        pred = self.predictor.predict(np.asarray(tokens))          # (L, B, S)
+        K = self.moe_cfg.top_k
+        # top-1 prediction broadcast over k (paper predicts the top-1 expert)
+        return jnp.asarray(pred)[..., None].repeat(K, -1)          # (L,B,S,K)
+
+    # ----------------------------------------------------------------- steps
+    def prefill(self, batch: Dict, cache=None):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pred = self._predict_tokens(tokens)
+        prefill_step, _ = self._steps()
+        if cache is None:
+            cache = init_cache(self.cfg, self._runtime(), B, self.serve.max_len)
+        plan = self._current_plan()
+        ctx = self.mesh or _nullcontext()
+        with ctx:
+            if getattr(self, "_in_graph", False):
+                logits, cache, stats, next_plan = prefill_step(
+                    self.params, batch, cache, plan, pred)
+                self._plan_stack = next_plan
+            else:
+                logits, cache, stats = prefill_step(self.params, batch,
+                                                    cache, plan, pred)
+        self._observe(stats, num_tokens=B * S,
+                      skip_replan=getattr(self, "_in_graph", False))
+        return logits, cache, stats
+
+    def decode(self, tokens, cache, cache_len: int):
+        _, decode_step = self._steps()
+        plan = self._current_plan()
+        ctx = self.mesh or _nullcontext()
+        with ctx:
+            next_tok, logits, cache, stats = decode_step(
+                self.params, tokens, cache, cache_len, plan)
+        return next_tok, logits, cache, stats
+
+    def generate(self, batch: Dict, max_new_tokens: int = 8):
+        """Prefill + greedy decode; returns (generated (B, T), telemetry)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        logits, cache, _ = self.prefill(batch, cache=None)
+        next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
+        out = [next_tok]
+        for t in range(max_new_tokens - 1):
+            next_tok, _, cache, _ = self.decode(next_tok, cache, S + t)
+            out.append(next_tok)
+        return jnp.concatenate(out, axis=1), self.history[-1] if self.history else {}
+
+    # -------------------------------------------------------------- observe
+    def _observe(self, stats: Dict, num_tokens: int,
+                 skip_replan: bool = False):
+        """Feed router histograms to the estimator; replan on the interval."""
+        self.batches_seen += 1
+        if not self.cfg.is_moe or stats.get("expert_counts") is None:
+            return
+        counts = np.asarray(stats["expert_counts"], np.float64)   # (L, E)
+        self.estimator.update(counts)
+        tele = {"batch": self.batches_seen,
+                "skew": float(counts.sum(0).max()
+                              / max(counts.sum(0).mean(), 1e-9))}
+        self.history.append(tele)
+        if (not skip_replan and self.serve.strategy != "none"
+                and self.batches_seen % self.serve.predict_interval == 0):
+            self.replan()
+
+    # ------------------------------------------------------------- telemetry
+    def rank_loads(self, slot_counts: np.ndarray) -> np.ndarray:
+        """(L, S) slot counts -> (L, R) per-rank token loads."""
+        m = self.moe_cfg
+        n_slots = m.num_experts // self.ep_ranks + m.duplication_slots
+        sc = np.asarray(slot_counts, np.float64)
+        return sc.reshape(sc.shape[0], self.ep_ranks, n_slots).sum(-1)

@@ -1,0 +1,65 @@
+"""Batched request scheduler for the serving examples/benchmarks.
+
+Deliberately simple (FIFO + padding to a fixed batch): the paper's
+contribution is inside the MoE layer, not the scheduler — but the engine
+needs a realistic request flow to exercise per-batch prediction/replanning.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (S,) prompt tokens
+    max_new_tokens: int = 8
+    generated: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class BatchScheduler:
+    """FIFO scheduler: pads prompts to a common length, yields full batches."""
+
+    def __init__(self, batch_size: int, seq_len: int, pad_id: int = 0):
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.pad_id = pad_id
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def has_work(self) -> bool:
+        return len(self.queue) > 0
+
+    def next_batch(self) -> Optional[Dict]:
+        if not self.queue:
+            return None
+        batch_reqs = self.queue[:self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        toks = np.full((len(batch_reqs), self.seq_len), self.pad_id, np.int32)
+        mask = np.zeros((len(batch_reqs), self.seq_len), np.float32)
+        for i, r in enumerate(batch_reqs):
+            s = min(len(r.tokens), self.seq_len)
+            toks[i, :s] = r.tokens[:s]
+            mask[i, :s] = 1.0
+        # pad the batch dim to a full batch (static shapes for jit)
+        if len(batch_reqs) < self.batch_size:
+            pad = self.batch_size - len(batch_reqs)
+            toks = np.concatenate([toks, np.zeros((pad, self.seq_len), np.int32)])
+            mask = np.concatenate([mask, np.zeros((pad, self.seq_len), np.float32)])
+        return {"tokens": toks, "mask": mask, "requests": batch_reqs}
+
+    def finish(self, reqs: List[Request], generated: np.ndarray):
+        for i, r in enumerate(reqs):
+            r.generated.extend(int(t) for t in generated[i])
+            self.completed.append(r)

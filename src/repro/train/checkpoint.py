@@ -1,0 +1,97 @@
+"""Checkpointing: flat-key .npz save/restore of arbitrary pytrees.
+
+No external deps (offline container): arrays are stored under their
+'/'-joined tree path in a single compressed npz; the treedef is rebuilt
+from the paths on restore. Works for params, optimizer state, and the
+serving engine's estimator counts alike.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                parts.append(f"#{k.idx}")
+            elif isinstance(k, jax.tree_util.GetAttrKey):
+                parts.append(str(k.name))
+            else:
+                parts.append(str(k))
+        out["/".join(parts)] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez_compressed(path, **_flatten(tree))
+
+
+def _insert(root: Dict, keys: Tuple[str, ...], value):
+    node = root
+    for k in keys[:-1]:
+        node = node.setdefault(k, {})
+    node[keys[-1]] = value
+
+
+def _dictify(node):
+    """Convert {'#0': .., '#1': ..} levels back into lists."""
+    if not isinstance(node, dict):
+        return node
+    if node and all(re.fullmatch(r"#\d+", k) for k in node):
+        return [_dictify(node[f"#{i}"]) for i in range(len(node))]
+    return {k: _dictify(v) for k, v in node.items()}
+
+
+def load(path: str) -> Any:
+    """Restore the nested dict/list structure (leaves are np arrays)."""
+    with np.load(path, allow_pickle=False) as z:
+        root: Dict = {}
+        for key in z.files:
+            _insert(root, tuple(key.split("/")), z[key])
+    return _dictify(root)
+
+
+def restore_like(template: Any, loaded: Any) -> Any:
+    """Map loaded leaves onto ``template``'s pytree BY PATH (robust to
+    container-type differences — NamedTuples load back as dicts)."""
+    flat_loaded = _flatten(loaded)
+    t_flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, t in t_flat:
+        parts = []
+        for k in kp:
+            if isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                parts.append(f"#{k.idx}")
+            elif isinstance(k, jax.tree_util.GetAttrKey):
+                parts.append(str(k.name))
+            else:
+                parts.append(str(k))
+        key = "/".join(parts)
+        if key not in flat_loaded:
+            # NamedTuple fields save as attr names but load back as
+            # positional '#i' keys when the container became a list
+            alt = "/".join(p if not p.startswith("#") else p
+                           for p in parts)
+            if alt not in flat_loaded:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            key = alt
+        arr = np.asarray(flat_loaded[key])
+        if hasattr(t, "dtype"):
+            arr = arr.astype(t.dtype).reshape(t.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,72 @@
+"""Property tests on the EP dispatch helpers (single device, hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.duplication import duplicate_experts_jax
+from repro.core.placement import identity_plan, plan_dims
+from repro.data.synthetic import skewed_distribution
+from repro.moe.dispatch import _positions_in_slot, capacity, choose_replica
+
+
+@given(st.integers(1, 200), st.integers(1, 16))
+@settings(max_examples=40, deadline=None)
+def test_positions_in_slot_are_dense_ranks(n, num_slots):
+    rng = np.random.default_rng(n * 31 + num_slots)
+    gslot = rng.integers(0, num_slots, size=n).astype(np.int32)
+    pos = np.asarray(_positions_in_slot(jnp.asarray(gslot), num_slots))
+    for s in range(num_slots):
+        got = sorted(pos[gslot == s].tolist())
+        assert got == list(range(len(got)))      # 0..count-1, no gaps
+
+
+@given(st.integers(1, 4096), st.integers(1, 8), st.integers(4, 64),
+       st.floats(1.0, 4.0))
+@settings(max_examples=50, deadline=None)
+def test_capacity_covers_expected_load(t_local, top_k, slots, factor):
+    c = capacity(t_local, top_k, slots, factor)
+    assert c >= 8 and c % 8 == 0
+    assert c * slots >= t_local * top_k          # factor >= 1: no forced drop
+
+
+@given(st.floats(1.0, 7.5), st.integers(0, 2), st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_choose_replica_targets_host_slots(skew, dup_slots, salt0):
+    """Every chosen slot actually hosts the token's expert (identity AND
+    post-duplication plans)."""
+    E, R = 8, 4
+    e_loc, n_slots = plan_dims(E, R, dup_slots)
+    dist = skewed_distribution(E, skew)
+    plans = [identity_plan(E, R, dup_slots, 4)]
+    if dup_slots:
+        plans.append(duplicate_experts_jax(jnp.asarray(dist), R, dup_slots, 4))
+    expert = jnp.arange(64, dtype=jnp.int32) % E
+    salt = (jnp.arange(64, dtype=jnp.int32) + salt0)
+    for plan in plans:
+        gslot = np.asarray(choose_replica(plan, expert, salt))
+        table = np.asarray(plan.replica_table)
+        n_rep = np.asarray(plan.n_replicas)
+        for e, g in zip(np.asarray(expert), gslot):
+            assert g in table[e, :n_rep[e]], (e, g, table[e])
+
+
+@given(st.floats(1.5, 7.5))
+@settings(max_examples=25, deadline=None)
+def test_round_robin_spreads_hot_expert(skew):
+    """Tokens of a duplicated expert land on ALL of its replicas."""
+    E, R, D = 8, 4, 2
+    dist = skewed_distribution(E, skew)
+    plan = duplicate_experts_jax(jnp.asarray(dist), R, D, 4)
+    n_rep = np.asarray(plan.n_replicas)
+    hot = int(np.argmax(n_rep))
+    if n_rep[hot] < 2:
+        return
+    expert = jnp.full((256,), hot, jnp.int32)
+    salt = jnp.arange(256, dtype=jnp.int32)
+    gslot = np.asarray(choose_replica(plan, expert, salt))
+    assert len(set(gslot.tolist())) == n_rep[hot]
+    # round-robin is near-even
+    counts = np.bincount(gslot)
+    counts = counts[counts > 0]
+    assert counts.max() - counts.min() <= 1

@@ -1,0 +1,58 @@
+"""Dry-run machinery tests: one real (arch x shape x 512-device mesh)
+lower+compile in a subprocess (the full 40-combo matrix runs via
+``python -m repro.launch.dryrun`` and is recorded in EXPERIMENTS.md)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen1.5-0.5b", "decode_32k"),
+    ("deepseek-v2-lite-16b", "long_500k"),
+])
+def test_dryrun_single_combo(arch, shape, tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900,
+        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src")))
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "OK" in out.stdout
+    path = tmp_path / f"{arch}_{shape}_16x16.json"
+    with open(path) as f:
+        rep = json.load(f)
+    assert rep["status"] == "ok"
+    assert rep["chips"] == 256
+    assert rep["compute_s"] > 0 and rep["memory_s"] > 0
+    assert rep["dominant"] in ("compute", "memory", "collective")
+
+
+def test_multipod_mesh_combo(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "olmo-1b", "--shape", "decode_32k", "--multi-pod",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900,
+        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src")))
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    with open(tmp_path / "olmo-1b_decode_32k_2x16x16.json") as f:
+        rep = json.load(f)
+    assert rep["chips"] == 512 and rep["status"] == "ok"
+
+
+def test_mesh_functions_are_lazy():
+    """Importing mesh.py must not initialise jax devices."""
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.launch.mesh, jax\n"
+         "assert not jax._src.xla_bridge._backends, 'devices initialised!'\n"
+         "print('lazy ok')"],
+        capture_output=True, text=True, timeout=120,
+        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src")))
+    assert out.returncode == 0 and "lazy ok" in out.stdout, out.stderr[-1500:]

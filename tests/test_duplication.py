@@ -1,0 +1,138 @@
+"""Algorithm 1 (expert duplication) — unit + property tests.
+
+Invariants proved:
+  * balance: the post-duplication bottleneck load never exceeds the
+    no-duplication bottleneck;
+  * constraints: <= C_max copies per expert, <= dup_slots extra copies per
+    rank, one pool contribution per source rank;
+  * plan consistency: every replica_table entry points at a slot whose
+    rank actually hosts the expert; n_replicas matches the table;
+  * jax planner: produces feasible plans that do not regress the
+    bottleneck (greedy parity with the host planner is not required).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.balance import bottleneck_factor, comm_factor, error_rate, skewness
+from repro.core.duplication import (bottleneck_load, duplicate_experts_host,
+                                    duplicate_experts_jax)
+from repro.core.placement import identity_plan, plan_dims
+from repro.data.synthetic import skewed_distribution
+
+
+def rank_loads_from_plan(dist, plan, ep_ranks, dup_slots):
+    """Recompute per-rank loads from plan arrays only."""
+    E = len(dist)
+    e_loc, n_slots = plan_dims(E, ep_ranks, dup_slots)
+    loads = np.zeros(ep_ranks)
+    n_rep = np.asarray(plan.n_replicas)
+    table = np.asarray(plan.replica_table)
+    for e in range(E):
+        share = dist[e] / n_rep[e]
+        for c in range(n_rep[e]):
+            loads[table[e, c] // n_slots] += share
+    return loads
+
+
+dists = st.integers(2, 6).flatmap(
+    lambda log_e: st.lists(st.floats(0.01, 1.0), min_size=2 ** log_e,
+                           max_size=2 ** log_e))
+
+
+@given(dists, st.sampled_from([2, 4, 8]), st.integers(1, 3))
+@settings(max_examples=60, deadline=None)
+def test_host_planner_invariants(weights, ep_ranks, dup_slots):
+    dist = np.asarray(weights)
+    if dist.shape[0] % ep_ranks:
+        return
+    dist = dist / dist.sum()
+    E = dist.shape[0]
+    res = duplicate_experts_host(dist, ep_ranks, dup_slots, max_copies=4)
+
+    base = bottleneck_load(dist, ep_ranks)
+    # balance invariant (never worse than home placement)
+    assert res.rank_loads.max() <= base + 1e-9
+    # constraint: copies per expert
+    assert np.asarray(res.plan.n_replicas).max() <= 4
+    # constraint: extra copies per destination rank
+    e_loc, n_slots = plan_dims(E, ep_ranks, dup_slots)
+    dests = [g for (_, g) in res.assignments]
+    for g in set(dests):
+        assert dests.count(g) <= dup_slots
+    # constraint: one pool contribution per source rank
+    srcs = {}
+    for (e, _) in res.assignments:
+        src = e // e_loc
+        srcs.setdefault(src, set()).add(e)
+    assert all(len(v) == 1 for v in srcs.values())
+    # plan-array consistency: loads recomputed from the plan match
+    loads = rank_loads_from_plan(dist, res.plan, ep_ranks, dup_slots)
+    np.testing.assert_allclose(loads, res.rank_loads, atol=1e-9)
+
+
+@given(st.floats(1.0, 7.9), st.integers(1, 3))
+@settings(max_examples=30, deadline=None)
+def test_jax_planner_feasible_and_no_regression(skew, dup_slots):
+    dist = skewed_distribution(8, skew)
+    plan = duplicate_experts_jax(jnp.asarray(dist), ep_ranks=4,
+                                 dup_slots=dup_slots, max_copies=4)
+    n_rep = np.asarray(plan.n_replicas)
+    assert n_rep.min() >= 1 and n_rep.max() <= 4
+    loads = rank_loads_from_plan(dist, plan, 4, dup_slots)
+    assert loads.max() <= bottleneck_load(dist, 4) + 1e-6
+    # table entries point into valid slots
+    e_loc, n_slots = plan_dims(8, 4, dup_slots)
+    table = np.asarray(plan.replica_table)
+    assert table.min() >= 0 and table.max() < 4 * n_slots
+
+
+def test_duplication_fixes_hot_expert():
+    """Paper Fig 2/3 scenario: expert 0 takes 75% of tokens on 4 ranks."""
+    dist = np.array([0.75, 0.05, 0.05, 0.05, 0.025, 0.025, 0.025, 0.025])
+    res = duplicate_experts_host(dist, ep_ranks=4, dup_slots=1, max_copies=4)
+    assert bottleneck_load(dist, 4) >= 0.80           # rank 0 held 80%
+    assert res.rank_loads.max() < 0.45                # after: ~balanced
+    assert np.asarray(res.plan.n_replicas)[0] >= 2    # the hot expert split
+
+
+def test_identity_plan_roundtrip():
+    plan = identity_plan(8, 4, 2, 4)
+    assert np.asarray(plan.n_replicas).tolist() == [1] * 8
+    table = np.asarray(plan.replica_table)
+    e_loc, n_slots = plan_dims(8, 4, 2)
+    for e in range(8):
+        assert table[e, 0] == (e // e_loc) * n_slots + e % e_loc
+
+
+# --------------------------------------------------------------------------
+# metrics (paper Sec 2 / 3.3)
+# --------------------------------------------------------------------------
+
+def test_skewness_definition():
+    assert skewness([0.75, 0.25 / 3, 0.25 / 3, 0.25 / 3]) == pytest.approx(3.0)
+    assert skewness([0.25] * 4) == pytest.approx(1.0)
+
+
+@given(st.floats(1.0, 16.0))
+@settings(max_examples=20, deadline=None)
+def test_skewed_distribution_calibration(skew):
+    dist = skewed_distribution(16, skew)
+    assert skewness(dist) == pytest.approx(skew, rel=1e-3)
+    assert dist.sum() == pytest.approx(1.0)
+
+
+def test_error_rate_metric():
+    p = np.array([0.5, 0.5])
+    assert error_rate(p, p) == 0.0
+    assert error_rate(np.array([0.6, 0.4]), p) == pytest.approx(0.2)
+
+
+def test_bottleneck_factor_scenarios():
+    assert bottleneck_factor(0.1, 4, "optimistic") == 1.0
+    assert bottleneck_factor(0.1, 4, "typical") == pytest.approx(1.1)
+    assert bottleneck_factor(0.1, 4, "pessimistic") == pytest.approx(4.4)
+    assert comm_factor(0.1) == pytest.approx(1.1)

@@ -1,0 +1,101 @@
+"""Predictor ladder tests (paper Sec 3.2 / Appendix B).
+
+Validates the ladder ordering the paper's tradeoff rests on:
+accuracy(probability) <= accuracy(conditional) <= accuracy(neural) on a
+predictable synthetic corpus, and the Distribution-Only estimator's
+error-vs-skew behaviour (Table 1 direction)."""
+
+import numpy as np
+import pytest
+
+from repro.core.balance import error_rate
+from repro.core.predictors import (ConditionalProbabilityModel,
+                                   DistributionEstimator, FFNPredictor,
+                                   LSTMPredictor, ProbabilityModel, accuracy)
+from repro.data.synthetic import make_routing_trace
+
+L, E, V = 2, 8, 256
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return make_routing_trace(num_sequences=192, seq_len=64, vocab=V,
+                              num_experts=E, num_layers=L, skew=1.6,
+                              predictability=0.9, seed=1)
+
+
+def split(trace, frac=0.8):
+    n = trace.tokens.shape[0]
+    k = int(n * frac)
+    return ((trace.tokens[:k], trace.experts[:, :k]),
+            (trace.tokens[k:], trace.experts[:, k:]))
+
+
+def test_probability_model_floor(trace):
+    (tok_tr, ex_tr), (tok_te, ex_te) = split(trace)
+    m = ProbabilityModel(L, E).fit(ex_tr)
+    acc = accuracy(m.predict(tok_te), ex_te)
+    # always guessing the hottest expert ~= its share (skew/E), plus slack
+    assert 0.05 <= acc <= 0.65
+
+
+def test_conditional_beats_probability(trace):
+    (tok_tr, ex_tr), (tok_te, ex_te) = split(trace)
+    prob = ProbabilityModel(L, E).fit(ex_tr)
+    cond = ConditionalProbabilityModel(L, E, V).fit(ex_tr, tok_tr)
+    acc_p = accuracy(prob.predict(tok_te), ex_te)
+    acc_c = accuracy(cond.predict(tok_te), ex_te)
+    assert acc_c > acc_p + 0.1           # token identity captures the rule
+    assert acc_c > 0.6                   # predictability=0.9 is learnable
+
+
+def test_ffn_predictor_learns(trace):
+    (tok_tr, ex_tr), (tok_te, ex_te) = split(trace)
+    m = FFNPredictor(L, E, V, seed=0).fit(ex_tr, tok_tr, steps=150, batch=32)
+    acc = accuracy(m.predict(tok_te), ex_te)
+    assert acc > 0.55
+
+
+def test_lstm_predictor_learns(trace):
+    (tok_tr, ex_tr), (tok_te, ex_te) = split(trace)
+    m = LSTMPredictor(L, E, V, seed=0).fit(ex_tr, tok_tr, steps=120, batch=16)
+    acc = accuracy(m.predict(tok_te), ex_te)
+    assert acc > 0.5
+
+
+def test_overhead_ordering():
+    """flops(probability) < flops(conditional) < flops(ffn) < flops(lstm)."""
+    ffn = FFNPredictor(L, E, V)
+    lstm = LSTMPredictor(L, E, V)
+    fl = [ProbabilityModel.flops_per_token(L),
+          ConditionalProbabilityModel.flops_per_token(L),
+          ffn.flops_per_token(L), lstm.flops_per_token(L)]
+    assert fl == sorted(fl) and fl[0] < fl[-1]
+
+
+def test_distribution_estimator_mle_and_ema():
+    est = DistributionEstimator(num_layers=1, num_experts=4, ema=0.5)
+    est.update(np.array([[8, 4, 2, 2]]))
+    np.testing.assert_allclose(est.predict()[0], [0.5, 0.25, 0.125, 0.125])
+    est.update(np.array([[0, 0, 8, 8]]))         # EMA moves halfway
+    p = est.predict()[0]
+    np.testing.assert_allclose(p, [0.25, 0.125, 0.3125, 0.3125])
+    assert DistributionEstimator.flops_per_token(32) == 0.0
+
+
+def test_distribution_error_grows_with_skew():
+    """Table 1 direction: higher skew -> larger relative estimation error
+    (cold experts see few tokens). Measured over small-sample batches."""
+    errs = {}
+    for skew in (1.4, 3.0):
+        tr = make_routing_trace(num_sequences=40, seq_len=16, vocab=V,
+                                num_experts=E, num_layers=1, skew=skew,
+                                predictability=0.0, seed=2)
+        (tok_tr, ex_tr), (tok_te, ex_te) = split(tr)
+        est = DistributionEstimator(1, E)
+        counts = np.stack([np.bincount(ex_tr[0].reshape(-1), minlength=E)])
+        est.update(counts.astype(np.float64))
+        p_te = np.stack([np.bincount(ex_te[0].reshape(-1), minlength=E)])
+        p_te = p_te / p_te.sum()
+        errs[skew] = error_rate(est.predict(), p_te)
+    assert errs[1.4] < 0.5               # low skew estimates well

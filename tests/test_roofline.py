@@ -1,0 +1,133 @@
+"""Roofline machinery tests: HLO collective parsing (incl. loop-trip
+correction), analytic op model sanity, report plumbing."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.roofline import (RooflineReport, _shape_bytes, analytic_flops,
+                            analytic_hbm_bytes, collective_bytes, model_flops)
+
+HLO_FLAT = """
+HloModule test
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128] parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = f32[64,128]{1,0} all-gather(%ar), dimensions={0}
+  ROOT %out = f32[16,128]{1,0} reduce-scatter(%ag), dimensions={0}
+}
+"""
+
+HLO_LOOPED = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8] parameter(0)
+  %ag = f32[32,8]{1,0} all-gather(%p0), dimensions={0}
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], bf16[8])") == 16 + 16
+    assert _shape_bytes("f32[]") == 4
+    assert _shape_bytes("pred[7]") == 7
+
+
+def test_collective_bytes_flat():
+    out = collective_bytes(HLO_FLAT)
+    assert out["all-reduce"] == 16 * 128 * 4
+    assert out["all-gather"] == 64 * 128 * 4
+    assert out["reduce-scatter"] == 16 * 128 * 4
+    assert out["count"] == 3
+
+
+def test_collective_bytes_loop_correction():
+    """Collectives inside a while body are multiplied by the trip count;
+    entry-level collectives are not."""
+    out1 = collective_bytes(HLO_LOOPED, loop_trips=1)
+    out10 = collective_bytes(HLO_LOOPED, loop_trips=10)
+    ar, ag = 8 * 8 * 4, 32 * 8 * 4
+    assert out1["all-reduce"] == ar and out1["all-gather"] == ag
+    assert out10["all-reduce"] == 10 * ar        # in the loop
+    assert out10["all-gather"] == ag             # outside the loop
+
+
+# --------------------------------------------------------------------------
+# analytic op model
+# --------------------------------------------------------------------------
+
+def test_model_flops_train_6nd():
+    cfg = get_config("olmo-1b")
+    sh = INPUT_SHAPES["train_4k"]
+    assert model_flops(cfg, sh) == pytest.approx(
+        6.0 * cfg.num_params() * sh.global_batch * sh.seq_len)
+
+
+def test_model_flops_moe_counts_active_only():
+    cfg = get_config("arctic-480b")
+    sh = INPUT_SHAPES["prefill_32k"]
+    assert model_flops(cfg, sh) < 2.0 * cfg.num_params() * \
+        sh.global_batch * sh.seq_len * 0.2
+
+
+def test_analytic_flops_ordering():
+    """train > prefill (3x backward) >> decode, for the same arch."""
+    cfg = get_config("stablelm-3b")
+    f = {k: analytic_flops(cfg, INPUT_SHAPES[k]) for k in INPUT_SHAPES}
+    assert f["train_4k"] > f["prefill_32k"] > f["decode_32k"] > f["long_500k"]
+
+
+def test_analytic_flops_close_to_model_flops_dense():
+    """For a dense arch at train shapes, the analytic total is within ~2x
+    of 6ND (attention + vocab head explain the excess)."""
+    cfg = get_config("olmo-1b")
+    sh = INPUT_SHAPES["train_4k"]
+    ratio = analytic_flops(cfg, sh) / model_flops(cfg, sh)
+    assert 1.0 <= ratio <= 2.5
+
+
+def test_analytic_hbm_decode_dominated_by_cache_or_weights():
+    cfg = get_config("stablelm-3b")
+    b = analytic_hbm_bytes(cfg, INPUT_SHAPES["decode_32k"], 256)
+    # full KV cache (32k x 32 kv-heads) read dominates a 3B model's weights
+    params_term = cfg.num_params() * 2 / 256
+    assert b > params_term
+
+
+def test_report_dominant_and_ratio():
+    rep = RooflineReport(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        analytic_flops_per_device=197e12,      # exactly 1s compute
+        analytic_hbm_per_device=819e9 / 2,     # 0.5s memory
+        hlo_flops_per_device=1e12, hlo_bytes_per_device=1e9,
+        collective_bytes_per_device=9e9,       # 0.1s collective
+        model_flops_total=197e12 * 256 / 2)
+    assert rep.dominant == "compute"
+    assert rep.total_s == pytest.approx(1.0)
+    assert rep.useful_flops_ratio == pytest.approx(0.5)
+    row = rep.row()
+    assert {"compute_s", "memory_s", "collective_s", "dominant"} <= set(row)

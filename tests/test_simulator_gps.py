@@ -1,0 +1,151 @@
+"""MoE-GPS simulator + strategy selection tests — validates the paper's
+claims qualitatively AND the >23% headline quantitatively."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.core.gps import (GPSReport, T2EPoint, default_dist_eps,
+                            default_t2e_curve, fit_overhead_curve, run_gps,
+                            sweep)
+from repro.core.simulator import (A100_NVLINK, A100_PCIE, TPU_V5E_DCN,
+                                  TPU_V5E_POD, HardwareConfig,
+                                  duplication_is_hideable,
+                                  duplication_move_time, layer_latency)
+
+MIX = get_config("mixtral-8x7b")
+
+
+def test_baseline_latency_scales_with_skew():
+    lats = [layer_latency(MIX, A100_NVLINK, batch=1, seq=512, skew=s).total
+            for s in (1.0, 1.4, 2.0, 3.0)]
+    assert all(b > a for a, b in zip(lats, lats[1:]))
+
+
+def test_ffn_term_scales_linearly_with_skew():
+    l1 = layer_latency(MIX, A100_NVLINK, batch=1, seq=512, skew=1.0)
+    l3 = layer_latency(MIX, A100_NVLINK, batch=1, seq=512, skew=3.0)
+    assert l3.ffn == pytest.approx(3 * l1.ffn, rel=0.01)
+    assert l3.attention == pytest.approx(l1.attention)   # skew-independent
+
+
+def test_dist_only_reduces_ffn_not_comm():
+    base = layer_latency(MIX, A100_PCIE, batch=1, seq=512, skew=2.0)
+    d = layer_latency(MIX, A100_PCIE, batch=1, seq=512, skew=2.0,
+                      strategy="dist_only", eps=0.05)
+    assert d.ffn < base.ffn
+    assert d.dispatch == pytest.approx(base.dispatch)    # paper accounting
+    assert d.overhead == 0.0
+
+
+def test_t2e_reduces_comm_but_adds_overhead():
+    base = layer_latency(MIX, A100_PCIE, batch=1, seq=512, skew=2.0)
+    t = layer_latency(MIX, A100_PCIE, batch=1, seq=512, skew=2.0,
+                      strategy="token_to_expert", eps=0.1, overhead_frac=0.2)
+    assert t.dispatch < base.dispatch
+    assert t.overhead > 0
+
+
+def test_pessimistic_worse_than_typical():
+    kw = dict(batch=1, seq=512, skew=1.4, strategy="dist_only", eps=0.1)
+    t = layer_latency(MIX, A100_NVLINK, scenario="typical", **kw)
+    p = layer_latency(MIX, A100_NVLINK, scenario="pessimistic", **kw)
+    o = layer_latency(MIX, A100_NVLINK, scenario="optimistic", **kw)
+    assert o.ffn < t.ffn < p.ffn
+
+
+def test_headline_23_percent_mixtral_mmlu_nvlink():
+    """Paper abstract: Distribution-Only beats the best Token-to-Expert
+    config by >23% on Mixtral 8x7B at MMLU skewness (1.4) on NVLink."""
+    rep = run_gps(MIX, A100_NVLINK, batch=1, seq=512, skew=1.4)
+    assert rep.best is rep.dist_only
+    assert rep.dist_only_speedup_over_t2e > 0.23
+
+
+def test_t2e_gains_ground_at_high_skew_low_bandwidth():
+    """Fig 7 direction: the dist-only advantage shrinks (or flips) as
+    skew rises and interconnect bandwidth drops."""
+    adv = {}
+    for name, hw in (("nvlink", A100_NVLINK), ("pcie", A100_PCIE)):
+        for skew in (1.4, 2.5):
+            rep = run_gps(MIX, hw, skew=skew)
+            adv[(name, skew)] = rep.saving_difference
+    assert adv[("pcie", 2.5)] < adv[("nvlink", 1.4)]
+    assert adv[("nvlink", 2.5)] < adv[("nvlink", 1.4)]
+    assert adv[("pcie", 1.4)] < adv[("nvlink", 1.4)]
+
+
+def test_t2e_wins_when_comm_dominates():
+    """Force a communication-starved link: token-level prediction's comm
+    savings must eventually beat dist-only (paper guideline, Fig 1)."""
+    slow = A100_PCIE.with_(link_bw=2e9, name="slow")
+    rep = run_gps(MIX, slow, skew=3.5)
+    assert rep.best_t2e.total < rep.baseline.total
+    assert rep.saving_difference < 0.05      # advantage gone or flipped
+
+
+def test_u_shape_in_t2e_accuracy():
+    """Fig 4: with rising accuracy, latency first falls then rises
+    (overhead wins) — the curve is not monotone."""
+    curve = [T2EPoint(f"p{i}", a, 0.002 * np.exp(6 * a))
+             for i, a in enumerate(np.linspace(0.3, 0.99, 12))]
+    rep = run_gps(MIX, A100_PCIE, skew=2.0, t2e_curve=curve)
+    tot = [r.total for r in rep.t2e_points]
+    best = int(np.argmin(tot))
+    assert 0 < best < len(tot) - 1
+
+
+def test_guideline_text_and_sweep():
+    reps = sweep(MIX, [A100_NVLINK, A100_PCIE], [1.4, 2.0])
+    assert len(reps) == 4
+    assert all(isinstance(r.guideline(), str) and "use " in r.guideline()
+               for r in reps)
+    rows = reps[0].summary_rows()
+    assert rows[0]["strategy"] == "none" and len(rows) >= 3
+
+
+def test_fit_overhead_curve_exponential():
+    pts = [T2EPoint("a", 0.5, 0.01), T2EPoint("b", 0.7, 0.05),
+           T2EPoint("c", 0.9, 0.25)]
+    f = fit_overhead_curve(pts)
+    assert f(0.5) == pytest.approx(0.01, rel=0.5)
+    assert f(0.95) > f(0.6)
+
+
+def test_default_dist_eps_interpolates_table1():
+    assert default_dist_eps(1.39) == pytest.approx(0.018, abs=1e-3)
+    assert default_dist_eps(1.99) == pytest.approx(0.16, abs=1e-2)
+    assert default_dist_eps(1.7) > default_dist_eps(1.45)
+
+
+def test_gps_rejects_dense_arch():
+    with pytest.raises(ValueError):
+        run_gps(get_config("qwen1.5-0.5b"), A100_NVLINK)
+
+
+def test_duplication_overhead_hideable_at_paper_sizes():
+    """Paper Sec 5: expert move ~0.1ms on a 2TB/s link; hidden under
+    attention for modest batch/seq. NOTE: the paper claims PCIe hideability
+    at batch 16 x seq 2K with a conservatively-overestimated (no-Flash)
+    attention; our flash-style attention model needs ~4x more tokens
+    (recorded in EXPERIMENTS.md)."""
+    fast = A100_NVLINK.with_(link_bw=2e12)       # the paper's 2 TB/s figure
+    t = duplication_move_time(MIX, fast)
+    assert t < 0.3e-3
+    assert not duplication_is_hideable(MIX, A100_PCIE, batch=16, seq=2048)
+    assert duplication_is_hideable(MIX, A100_PCIE, batch=64, seq=2048)
+
+
+@given(st.floats(1.0, 4.0), st.floats(0.0, 0.5))
+@settings(max_examples=30, deadline=None)
+def test_latency_terms_positive_and_finite(skew, eps):
+    lb = layer_latency(MIX, TPU_V5E_POD, batch=32, seq=2048, skew=skew,
+                       strategy="dist_only", eps=eps)
+    for v in lb.as_dict().values():
+        assert np.isfinite(v) and v >= 0
+
+
+def test_tpu_presets_exist():
+    assert TPU_V5E_POD.num_devices == 256
+    assert TPU_V5E_DCN.link_bw < TPU_V5E_POD.link_bw
