@@ -10,6 +10,8 @@ makes prediction easier/cheaper").
 
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.configs.registry import get_config
@@ -32,7 +34,10 @@ def model_flops_per_token() -> float:
 
 
 def ladder_for(skew: float, seed: int = 0, verbose=True):
-    tr = make_routing_trace(num_sequences=96, seq_len=S, vocab=V,
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    n_seq, seq_len = (24, 32) if smoke else (96, S)
+    ffn_steps, lstm_steps = (10, 5) if smoke else (150, 120)
+    tr = make_routing_trace(num_sequences=n_seq, seq_len=seq_len, vocab=V,
                             num_experts=E, num_layers=L, skew=skew,
                             predictability=0.85, seed=seed)
     n = int(tr.tokens.shape[0] * 0.8)
@@ -44,9 +49,9 @@ def ladder_for(skew: float, seed: int = 0, verbose=True):
         ("probability", ProbabilityModel(L, E).fit(ex_tr)),
         ("conditional", ConditionalProbabilityModel(L, E, V).fit(ex_tr, tok_tr)),
         ("ffn", FFNPredictor(L, E, V, seed=seed).fit(
-            ex_tr, tok_tr, steps=150, batch=32)),
+            ex_tr, tok_tr, steps=ffn_steps, batch=32)),
         ("lstm", LSTMPredictor(L, E, V, seed=seed).fit(
-            ex_tr, tok_tr, steps=120, batch=16)),
+            ex_tr, tok_tr, steps=lstm_steps, batch=16)),
     ]
     # The paper MEASURES overhead on A100 at batch 1 (Sec 5 admits tiny
     # predictors are launch/latency-bound there, not FLOPs-bound) and fits

@@ -30,8 +30,10 @@ out = {}
 for strat in ("none", "dist_only"):
     eng = ServeEngine(cfg, params, ServeConfig(strategy=strat, dup_slots=1),
                       mesh=mesh, ep_ranks=4)
-    gen = token_batches(0, cfg.vocab_size, batch=8, seq_len=64)
-    for i in range(5):
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    batch, seq, iters = (4, 32, 3) if smoke else (8, 64, 5)
+    gen = token_batches(0, cfg.vocab_size, batch=batch, seq_len=seq)
+    for i in range(iters):
         _, _, stats = eng.prefill({"tokens": jnp.asarray(next(gen)["tokens"])})
     rl = eng.rank_loads(np.asarray(stats["slot_counts"]))
     out[strat] = {

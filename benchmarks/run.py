@@ -1,37 +1,53 @@
-"""Benchmark harness: one entry per paper table/figure.
+"""Benchmark harness: one entry per paper table/figure + serving traces.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [name ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [name ...]
 
 Prints a ``name,us_per_call,derived`` CSV line per benchmark, where
 ``derived`` is the benchmark's key reproduced quantity (see each module).
+
+``--smoke``: seconds-scale configurations (exported to the bench modules
+via ``REPRO_BENCH_SMOKE=1``) so CI can exercise every benchmark end to
+end without reproducing the full figures.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 
-from benchmarks import (bench_appendix_c, bench_dup_overhead, bench_fig4,
-                        bench_fig6, bench_fig7, bench_runtime_balance,
-                        bench_table1)
-
-BENCHES = {
-    "table1_skew_vs_error": bench_table1.run,
-    "fig4_accuracy_overhead_perf": bench_fig4.run,
-    "fig6_latency_breakdown": bench_fig6.run,
-    "fig7_savings_vs_interconnect": bench_fig7.run,
-    "sec5_duplication_overhead": bench_dup_overhead.run,
-    "runtime_measured_balance": bench_runtime_balance.run,
-    "appendix_c_generality": bench_appendix_c.run,
-}
-
 
 def main(argv=None) -> int:
-    names = (argv or sys.argv[1:]) or list(BENCHES)
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--smoke" in argv:
+        argv.remove("--smoke")
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+    # import AFTER the env flag so modules can read it at import time too
+    from benchmarks import (bench_appendix_c, bench_dup_overhead, bench_fig4,
+                            bench_fig6, bench_fig7, bench_runtime_balance,
+                            bench_serve_traces, bench_table1)
+    benches = {
+        "table1_skew_vs_error": bench_table1.run,
+        "fig4_accuracy_overhead_perf": bench_fig4.run,
+        "fig6_latency_breakdown": bench_fig6.run,
+        "fig7_savings_vs_interconnect": bench_fig7.run,
+        "sec5_duplication_overhead": bench_dup_overhead.run,
+        "runtime_measured_balance": bench_runtime_balance.run,
+        "appendix_c_generality": bench_appendix_c.run,
+        "serve_traces_continuous": bench_serve_traces.run,
+    }
+
+    names = argv or list(benches)
+    unknown = [n for n in names if n not in benches]
+    if unknown:
+        print(f"unknown benchmark(s): {', '.join(unknown)}", file=sys.stderr)
+        print(f"available: {', '.join(benches)}", file=sys.stderr)
+        return 2
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
-        fn = BENCHES[name]
+        fn = benches[name]
         t0 = time.time()
         try:
             _, derived = fn(verbose=True)

@@ -219,3 +219,39 @@ def sweep(
 ) -> List[GPSReport]:
     """Fig 6/7 sweep: every (hardware, skew) point."""
     return [run_gps(cfg, hw, skew=s, **kw) for hw in hardwares for s in skews]
+
+
+# ---------------------------------------------------------------------------
+# online (serving-loop) entry point
+# ---------------------------------------------------------------------------
+
+def recommend_strategy(
+    cfg: ModelConfig,
+    hw: HardwareConfig,
+    *,
+    skew: float,
+    batch: int = 8,
+    seq: int = 256,
+    allow_t2e: bool = True,
+    min_saving: float = 0.02,
+    **kw,
+) -> Tuple[str, GPSReport]:
+    """One-shot guideline for the ONLINE controller: given the skew the
+    serving loop just *measured* (instead of an offline dataset estimate),
+    return the engine strategy name to run with next.
+
+    ``allow_t2e`` — False when no Token-to-Expert predictor is loaded in
+    the engine (the controller must not pick an unrunnable strategy).
+    ``min_saving`` — below this predicted end-to-end saving, duplication
+    is not worth its plan churn: run plain EP ("none").
+    """
+    report = run_gps(cfg, hw, batch=batch, seq=seq,
+                     skew=max(float(skew), 1.0), **kw)
+    candidates = [("dist_only", report.dist_only)]
+    if allow_t2e:
+        candidates.append(("token_to_expert", report.best_t2e))
+    name, best = min(candidates, key=lambda nr: nr[1].total)
+    saving = 1.0 - best.total / report.baseline.total
+    if saving < min_saving:
+        return "none", report
+    return name, report

@@ -111,7 +111,9 @@ def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
 
 def decode_attention(q, k_cache, v_cache, *, cache_len, window=0):
     """Single-token attention over a cache. q: (B, 1, H, hd);
-    k_cache/v_cache: (B, S_max, K, hd); cache_len: current length (incl. new token)."""
+    k_cache/v_cache: (B, S_max, K, hd); cache_len: current length (incl. new
+    token) — a scalar, or a (B,) vector for continuous batching where every
+    slot sits at its own position."""
     B, _, H, hd = q.shape
     _, S_max, K, _ = k_cache.shape
     G = H // K
@@ -119,10 +121,11 @@ def decode_attention(q, k_cache, v_cache, *, cache_len, window=0):
     qg = q.reshape(B, K, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache) * scale
     pos = jnp.arange(S_max)
-    mask = pos < cache_len                       # cache_len: scalar (traced ok)
+    cl = jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1, 1))  # (1|B, 1)
+    mask = pos[None, :] < cl                                      # (1|B, S)
     if window > 0:
-        mask = mask & (pos >= cache_len - window)
-    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+        mask = mask & (pos[None, :] >= cl - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache)
     return out.reshape(B, 1, H, hd)
@@ -195,6 +198,63 @@ def gqa_decode(params, cfg: ModelConfig, x, cache, cache_len, *, window=0):
     out = decode_attention(q, cache["k"], cache["v"],
                            cache_len=cache_len + 1, window=window)
     return dense(params["wo"], out.reshape(B, 1, -1)), cache
+
+
+def gqa_decode_multi(params, cfg: ModelConfig, x, cache, lengths, *, window=0):
+    """Continuous-batching decode over a slotted linear cache.
+
+    Every slot decodes at its OWN position: x: (B, 1, d); cache k/v:
+    (B, S_max, K, hd); lengths: (B,) int32 current length per slot (the new
+    token is written at ``lengths[b]``). Inactive slots decode garbage that
+    the caller masks out; their cache writes land at their own (stale)
+    position and are overwritten when the slot is re-prefilled.
+    """
+    B = x.shape[0]
+    positions = jnp.asarray(lengths, jnp.int32)[:, None]          # (B, 1)
+    q, k, v = gqa_project(params, cfg, x, positions)
+    cache = dict(cache)
+    b_idx = jnp.arange(B)
+    cache["k"] = cache["k"].at[b_idx, positions[:, 0]].set(
+        k[:, 0].astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[b_idx, positions[:, 0]].set(
+        v[:, 0].astype(cache["v"].dtype))
+    out = decode_attention(q, cache["k"], cache["v"],
+                           cache_len=lengths + 1, window=window)
+    return dense(params["wo"], out.reshape(B, 1, -1)), cache
+
+
+def gqa_decode_paged(params, cfg: ModelConfig, x, pool, block_tables, lengths,
+                     *, window: int = 0):
+    """Continuous-batching decode over a paged KV block pool.
+
+    pool k/v: (N_blocks, block, K, hd) — one shared fixed-shape pool, so
+    jit never recompiles as requests join/leave. block_tables: (B, M) int32
+    maps each slot's logical block m to a physical block (entries beyond a
+    slot's allocation point at the reserved null block 0 and are masked by
+    ``lengths``). lengths: (B,) — the new token is written at logical
+    position ``lengths[b]``, whose physical block MUST already be allocated
+    (the scheduler grows tables before calling). ``window``: architectural
+    sliding window, applied as a mask (blocks stay allocated — the pool is
+    linear in logical positions; correctness first, reclaim later).
+    """
+    B = x.shape[0]
+    N, bs, K, hd = pool["k"].shape
+    positions = jnp.asarray(lengths, jnp.int32)[:, None]          # (B, 1)
+    q, k, v = gqa_project(params, cfg, x, positions)
+    b_idx = jnp.arange(B)
+    blk = block_tables[b_idx, positions[:, 0] // bs]              # (B,)
+    off = positions[:, 0] % bs                                    # (B,)
+    pool = dict(pool)
+    # slots own disjoint blocks, so cross-slot collisions only happen on the
+    # null block (garbage, never read with a valid mask)
+    pool["k"] = pool["k"].at[blk, off].set(k[:, 0].astype(pool["k"].dtype))
+    pool["v"] = pool["v"].at[blk, off].set(v[:, 0].astype(pool["v"].dtype))
+    # gather each slot's logical view: (B, M, bs, K, hd) -> (B, M*bs, K, hd)
+    k_view = pool["k"][block_tables].reshape(B, -1, K, hd)
+    v_view = pool["v"][block_tables].reshape(B, -1, K, hd)
+    out = decode_attention(q, k_view, v_view, cache_len=lengths + 1,
+                           window=window)
+    return dense(params["wo"], out.reshape(B, 1, -1)), pool
 
 
 def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,

@@ -23,7 +23,22 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:                                      # jax >= 0.5 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                       # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect as _inspect
+_SHARD_MAP_PARAMS = _inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, **kw):
+    """Version-portable shard_map: new jax names the replication-check knob
+    ``check_vma``; 0.4.x called it ``check_rep``."""
+    if "check_vma" in kw and "check_vma" not in _SHARD_MAP_PARAMS:
+        kw["check_rep"] = kw.pop("check_vma")
+    return _shard_map(f, **kw)
 
 from repro.configs.base import ModelConfig
 from repro.core.placement import PlacementPlan, identity_plan
@@ -216,14 +231,25 @@ def init_cache(cfg: ModelConfig, rt: Runtime, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
-               predicted_l, decode: bool):
-    """x: (B, S, d). Returns (y, expert_counts (E,), aux, z)."""
+               predicted_l, decode: bool, token_weight=None):
+    """x: (B, S, d). Returns (y, expert_counts (E,), aux, z).
+
+    ``token_weight``: optional (B, S) per-token weight for the expert
+    histogram — the continuous-batching engine passes the active/padding
+    mask so estimator inputs only count REAL tokens (padded prefill
+    positions and idle decode slots still flow through the FFN but must
+    not skew the observed distribution).
+    """
     moe = cfg.moe
     B, S, d = x.shape
     if not rt.ep:
         y, router_out = moe_ffn_dense(layer_p["moe"], cfg, x)
+        w = (jnp.ones((B * S * moe.top_k,), jnp.float32)
+             if token_weight is None
+             else jnp.repeat(token_weight.reshape(-1).astype(jnp.float32),
+                             moe.top_k))
         counts = jnp.zeros((moe.num_experts,), jnp.float32).at[
-            router_out.expert_idx.reshape(-1)].add(1.0)
+            router_out.expert_idx.reshape(-1)].add(w)
         return y, counts, counts, router_out.aux_loss, router_out.z_loss
 
     mesh = rt.mesh
@@ -266,7 +292,7 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
         x_spec = P(baxes if baxes else None, "model", None)
         dispatch_fn = ep.ep_moe_ffn
 
-    def inner(x_blk, router_w, experts_w, plan, pred):
+    def inner(x_blk, router_w, experts_w, plan, pred, w_blk):
         t = x_blk.reshape(-1, x_blk.shape[-1])
         router_out = route(router_w, moe, t)
         y, stats = dispatch_fn(
@@ -278,6 +304,16 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
             use_kernel=rt.use_kernel)
         counts, slots = stats.expert_counts, stats.slot_counts
         aux, z = stats.aux_loss, stats.z_loss
+        if w_blk is not None:
+            # weighted histogram replaces the dispatch count (padding /
+            # idle-slot tokens carry weight 0). Prefill tokens are
+            # seq-sharded over the model axis, so re-psum there; decode
+            # tokens are replicated over it (counts already global).
+            wk = jnp.repeat(w_blk.reshape(-1).astype(jnp.float32), moe.top_k)
+            counts = jnp.zeros((moe.num_experts,), jnp.float32).at[
+                router_out.expert_idx.reshape(-1)].add(wk)
+            if not decode:
+                counts = jax.lax.psum(counts, rt.ep_axis)
         if baxes and not tp_mode:
             # stats are psum'd over "model" inside dispatch only; in
             # tp_mode tokens are replicated so stats are already global
@@ -289,13 +325,14 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
 
     plan_specs = PlacementPlan(P(), P(), P(), P())
     pred_spec = None if predicted_l is None else x_spec
+    w_spec = None if token_weight is None else P(*x_spec[:-1])
     y, counts, slot_counts, aux, z = shard_map(
         inner, mesh=mesh,
-        in_specs=(x_spec, P(), expert_specs, plan_specs, pred_spec),
+        in_specs=(x_spec, P(), expert_specs, plan_specs, pred_spec, w_spec),
         out_specs=(x_spec, P(), P(), P(), P()),
         check_vma=False,
     )(x, layer_p["moe"]["router"], layer_p["moe"]["experts"], plan_l,
-      predicted_l)
+      predicted_l, token_weight)
 
     if "shared" in layer_p["moe"]:
         y = y + ffn(layer_p["moe"]["shared"], x, cfg.activation)
@@ -315,7 +352,8 @@ def _zero_stats(cfg):
 
 
 def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
-                mode="train", enc_out=None, plan_l=None, predicted_l=None):
+                mode="train", enc_out=None, plan_l=None, predicted_l=None,
+                block_tables=None, token_weight=None):
     """Generic attention+FFN layer for dense/moe/vlm/audio-decoder."""
     window = rt.window(cfg)
     h = apply_norm(cfg.norm, layer_p["ln1"], x)
@@ -338,9 +376,21 @@ def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
         new_cache = dict(cache, self=sub) if cfg.is_encdec else sub
     else:  # decode
         sub = cache["self"] if cfg.is_encdec else cache
-        if cfg.attention == "mla":
+        if block_tables is not None:
+            # continuous batching keeps caches linear (window_override =
+            # max_len for sizing) but must still MASK to the architectural
+            # sliding window, or paged decode diverges from windowed serving
+            a, sub = attn.gqa_decode_paged(layer_p["attn"], cfg, h, sub,
+                                           block_tables, cache_len,
+                                           window=cfg.sliding_window)
+        elif cfg.attention == "mla":
             a, sub = attn.mla_decode(layer_p["attn"], cfg, h, sub, cache_len,
                                      window=window)
+        elif jnp.ndim(cache_len) == 1:
+            # continuous batching: per-slot positions over a slotted cache
+            a, sub = attn.gqa_decode_multi(layer_p["attn"], cfg, h, sub,
+                                           cache_len,
+                                           window=cfg.sliding_window)
         else:
             a, sub = attn.gqa_decode_windowed(layer_p["attn"], cfg, h, sub,
                                               cache_len, window=window)
@@ -366,7 +416,7 @@ def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
     if cfg.is_moe:
         y, counts, slots, aux, z = _moe_apply(
             layer_p, cfg, h, rt, plan_l, predicted_l,
-            decode=(mode == "decode"))
+            decode=(mode == "decode"), token_weight=token_weight)
         stats = (counts, slots, aux, z)
     else:
         y = ffn(layer_p["ffn"], h, cfg.activation)
@@ -472,7 +522,8 @@ def _logits(params, cfg: ModelConfig, x):
 
 
 def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
-            cache=None, cache_len=None, plan=None, predicted_idx=None):
+            cache=None, cache_len=None, plan=None, predicted_idx=None,
+            block_tables=None, last_pos=None, token_weight=None):
     """Unified entry. Returns (logits, new_cache, stats_dict).
 
     mode=train:   logits (B, S, V) over the full sequence.
@@ -482,6 +533,17 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
     ``plan`` / ``predicted_idx`` override rt.plan / rt.predicted_idx so the
     serving loop can swap placement plans per prediction interval without
     recompiling (they are traced arguments, not closure constants).
+
+    Continuous-batching extensions (all traced, all optional):
+      ``cache_len``     — decode position; a scalar (legacy synchronous
+                          batch) or a (B,) vector of per-slot lengths.
+      ``block_tables``  — (B, M) physical-block map; selects the paged-KV
+                          decode path (cache = block pool).
+      ``last_pos``      — (B,) index of each request's last REAL prompt
+                          token; prefill logits are gathered there instead
+                          of at the padded end.
+      ``token_weight``  — (B, S) weight for MoE expert histograms (0 for
+                          padding / idle slots).
     """
     enc_out = None
     if cfg.is_encdec and mode != "decode":
@@ -490,7 +552,9 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
     if mode == "decode":
         B = batch["tokens"].shape[0]
         x = embed(params["embed"], batch["tokens"]).astype(jnp.bfloat16)
-        positions = jnp.full((B, 1), cache_len, jnp.int32)
+        cl = jnp.asarray(cache_len, jnp.int32)
+        positions = (cl[:, None] if cl.ndim == 1
+                     else jnp.full((B, 1), cache_len, jnp.int32))
     else:
         x, positions = _embed_inputs(params, cfg, batch)
     x = constrain_acts(x, rt)
@@ -548,7 +612,8 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
             h, new_c, st = _attn_layer(
                 layer_p, cfg, h, positions, rt, cache=cache_l,
                 cache_len=cache_len, mode=mode, enc_out=enc_out,
-                plan_l=plan_l, predicted_l=pred_l)
+                plan_l=plan_l, predicted_l=pred_l,
+                block_tables=block_tables, token_weight=token_weight)
             return constrain_acts(h, rt, seq_shard), (new_c, st)
 
         xs = (params["layers"], cache,
@@ -563,7 +628,12 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
             new_cache = None
 
     if mode == "prefill":
-        logits = _logits(params, cfg, x[:, -1:])
+        if last_pos is not None:
+            B = x.shape[0]
+            x_last = x[jnp.arange(B), jnp.asarray(last_pos, jnp.int32)][:, None]
+            logits = _logits(params, cfg, x_last)
+        else:
+            logits = _logits(params, cfg, x[:, -1:])
     elif mode == "decode":
         logits = _logits(params, cfg, x)
     else:

@@ -1,6 +1,26 @@
-"""Serving runtime: batched prefill/decode with prediction-guided dynamic
-expert duplication in the loop (the paper's end-to-end feature)."""
-from repro.serve.engine import ServeEngine, ServeConfig
-from repro.serve.scheduler import Request, BatchScheduler
+"""Serving runtime: continuous batching over a paged KV block pool, with
+prediction-guided dynamic expert duplication and an online GPS controller
+in the loop (the paper's end-to-end feature under live traffic).
 
-__all__ = ["BatchScheduler", "Request", "ServeConfig", "ServeEngine"]
+``ContinuousEngine`` is the production path; ``ServeEngine`` +
+``BatchScheduler`` remain as the synchronous (pad-to-one-batch) reference.
+"""
+from repro.serve.controller import (ControllerConfig, Decision,
+                                    OnlineGPSController)
+from repro.serve.engine import (ContinuousConfig, ContinuousEngine,
+                                ServeConfig, ServeEngine, StepEvents)
+from repro.serve.kvcache import BlockAllocator, init_block_pool
+from repro.serve.metrics import (RequestTiming, ServeMetrics, imbalance,
+                                 plan_rank_loads)
+from repro.serve.scheduler import (BatchScheduler, ContinuousScheduler,
+                                   IterationPlan, Request, RequestState,
+                                   ServeRequest)
+
+__all__ = [
+    "BatchScheduler", "BlockAllocator", "ContinuousConfig",
+    "ContinuousEngine", "ContinuousScheduler", "ControllerConfig",
+    "Decision", "IterationPlan", "OnlineGPSController", "Request",
+    "RequestState", "RequestTiming", "ServeConfig", "ServeEngine",
+    "ServeMetrics", "ServeRequest", "StepEvents", "imbalance",
+    "init_block_pool", "plan_rank_loads",
+]

@@ -1,0 +1,174 @@
+"""Online GPS controller: re-runs the paper's strategy selection on LIVE
+traffic instead of fixing the strategy at engine construction.
+
+The paper's core claim is that the best predictor depends on the
+deployment point (model, hardware, skew) — and skew is a property of the
+*traffic*, which drifts ("Prediction Is All MoE Needs" observes expert
+distributions fluctuating early in a serving session and stabilising
+later). So the controller:
+
+  1. aggregates the engine's per-iteration expert histograms over a
+     sliding window;
+  2. measures the window's skewness and its volatility across windows;
+  3. feeds the measured skew into ``repro.core.gps.recommend_strategy``
+     for the deployment's (model, hardware) point;
+  4. switches the engine strategy (none / dist_only / token_to_expert)
+     with hysteresis — a switch needs ``patience`` consecutive windows
+     agreeing, so a single bursty window can't thrash the plan;
+  5. adapts ``predict_interval``: volatile windows re-plan every batch,
+     stable windows stretch the interval (stale plans are fine when the
+     distribution stops moving).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.gps import GPSReport, recommend_strategy
+from repro.core.simulator import A100_PCIE, HardwareConfig
+from repro.serve.metrics import window_skew
+
+
+@dataclass
+class ControllerConfig:
+    hardware: HardwareConfig = A100_PCIE
+    window_iters: int = 16          # iterations aggregated per decision
+    patience: int = 2               # consecutive agreeing windows to switch
+    min_saving: float = 0.02        # below this, run strategy "none"
+    batch: int = 8                  # simulator operating point
+    seq: int = 256
+    # predict_interval ladder by skew volatility (std/mean across windows)
+    volatile_interval: int = 1
+    stable_interval: int = 8
+    volatility_threshold: float = 0.05
+    history_windows: int = 4        # windows used for the volatility estimate
+    # Skew transfer: when the engine measures skew on a REDUCED smoke model
+    # while the controller simulates the production deployment point, the
+    # achievable skew caps differ (max share is bounded by top_k/E, so
+    # skew <= E/top_k). Mapping preserves relative concentration:
+    #   c = (skew - 1) / (cap_obs - 1);  skew' = 1 + c * (cap_target - 1).
+    # 0 disables the transfer (engine and controller share one model).
+    skew_cap_observed: float = 0.0
+    skew_cap_target: float = 0.0
+
+
+@dataclass
+class Decision:
+    """One controller evaluation (ticked every ``window_iters``)."""
+    t: float
+    skew: float
+    volatility: float
+    recommended: str
+    strategy: str                   # strategy actually in force after this tick
+    predict_interval: int
+    switched: bool
+    report: Optional[GPSReport] = field(default=None, repr=False)
+
+
+class OnlineGPSController:
+    """Feeds measured per-window skew back into the GPS guideline."""
+
+    def __init__(self, model_cfg: ModelConfig, cfg: ControllerConfig = None,
+                 *, predictor_available: bool = False,
+                 initial_strategy: str = "dist_only"):
+        if not model_cfg.is_moe:
+            raise ValueError("the GPS controller needs a MoE model")
+        self.model_cfg = model_cfg
+        self.cfg = cfg or ControllerConfig()
+        self.predictor_available = predictor_available
+        self.strategy = initial_strategy
+        self.predict_interval = self.cfg.volatile_interval
+        self.decisions: List[Decision] = []
+        self._iters = 0
+        self._counts: Optional[np.ndarray] = None
+        self._skew_history: List[float] = []
+        self._pending: Optional[str] = None
+        self._pending_votes = 0
+
+    # ------------------------------------------------------------- observe
+    def observe(self, counts: Optional[np.ndarray], now: float
+                ) -> Optional[Decision]:
+        """Feed one iteration's (L, E) expert histogram (None for MoE-less
+        iterations). Returns a Decision when a window closes, else None."""
+        self._iters += 1
+        if counts is not None:
+            c = np.asarray(counts, np.float64)
+            self._counts = c if self._counts is None else self._counts + c
+        if self._iters < self.cfg.window_iters:
+            return None
+        decision = self._evaluate(now)
+        self._iters = 0
+        self._counts = None
+        return decision
+
+    # ------------------------------------------------------------ evaluate
+    def _measured_skew(self) -> Optional[float]:
+        if self._counts is None:
+            return None
+        return window_skew(self._counts)
+
+    def _volatility(self) -> float:
+        h = self._skew_history[-self.cfg.history_windows:]
+        if len(h) < 2:
+            return 0.0
+        return float(np.std(h) / max(np.mean(h), 1e-9))
+
+    def _transfer_skew(self, skew: float) -> float:
+        c = self.cfg
+        if not (c.skew_cap_observed > 1.0 and c.skew_cap_target > 1.0):
+            return skew
+        conc = (skew - 1.0) / (c.skew_cap_observed - 1.0)
+        return 1.0 + float(np.clip(conc, 0.0, 1.0)) * (c.skew_cap_target - 1.0)
+
+    def _evaluate(self, now: float) -> Optional[Decision]:
+        skew = self._measured_skew()
+        if skew is None:
+            return None
+        self._skew_history.append(skew)
+        vol = self._volatility()
+
+        recommended, report = recommend_strategy(
+            self.model_cfg, self.cfg.hardware, skew=self._transfer_skew(skew),
+            batch=self.cfg.batch, seq=self.cfg.seq,
+            allow_t2e=self.predictor_available,
+            min_saving=self.cfg.min_saving)
+
+        # hysteresis: require `patience` consecutive windows agreeing
+        switched = False
+        if recommended != self.strategy:
+            if recommended == self._pending:
+                self._pending_votes += 1
+            else:
+                self._pending, self._pending_votes = recommended, 1
+            if self._pending_votes >= self.cfg.patience:
+                self.strategy = recommended
+                self._pending, self._pending_votes = None, 0
+                switched = True
+        else:
+            self._pending, self._pending_votes = None, 0
+
+        self.predict_interval = (
+            self.cfg.volatile_interval
+            if vol >= self.cfg.volatility_threshold
+            else self.cfg.stable_interval)
+
+        d = Decision(t=now, skew=skew, volatility=vol,
+                     recommended=recommended, strategy=self.strategy,
+                     predict_interval=self.predict_interval,
+                     switched=switched, report=report)
+        self.decisions.append(d)
+        return d
+
+    # ------------------------------------------------------------ reporting
+    @property
+    def num_switches(self) -> int:
+        return sum(d.switched for d in self.decisions)
+
+    def switch_log(self) -> List[str]:
+        return [f"t={d.t:8.2f}s skew={d.skew:.2f} vol={d.volatility:.3f} "
+                f"-> {d.strategy} (interval={d.predict_interval})"
+                for d in self.decisions if d.switched]

@@ -31,8 +31,14 @@ from repro.core.duplication import duplicate_experts_host
 from repro.core.placement import PlacementPlan, identity_plan, stack_plans
 from repro.core.predictors import DistributionEstimator
 from repro.models.transformer import Runtime, forward, init_cache
-from repro.train.steps import (make_decode_step, make_prefill_replan_step,
-                               make_prefill_step)
+from repro.serve.kvcache import (BlockAllocator, init_block_pool,
+                                 write_prefill_blocks)
+from repro.serve.metrics import RequestTiming, ServeMetrics
+from repro.serve.scheduler import (ContinuousScheduler, IterationPlan,
+                                   ServeRequest)
+from repro.train.steps import (make_decode_step, make_paged_decode_step,
+                               make_prefill_replan_step, make_prefill_step,
+                               make_slot_prefill_step)
 
 
 class _nullcontext:
@@ -211,3 +217,392 @@ class ServeEngine:
         n_slots = m.num_experts // self.ep_ranks + m.duplication_slots
         sc = np.asarray(slot_counts, np.float64)
         return sc.reshape(sc.shape[0], self.ep_ranks, n_slots).sum(-1)
+
+
+# ===========================================================================
+# continuous batching
+# ===========================================================================
+
+@dataclass
+class ContinuousConfig:
+    """Knobs for the continuous-batching engine.
+
+    All shapes derived from these are STATIC: the decode batch is always
+    ``max_slots``, prompts pad to ``prefill_len``, and the KV pool holds
+    ``num_blocks`` blocks of ``block_size`` positions — so after warmup no
+    request pattern can trigger an XLA recompile.
+    """
+    max_slots: int = 8                # concurrent requests / decode batch
+    prefill_len: int = 64             # prompt bucket (multiple of block_size)
+    block_size: int = 16              # KV positions per block
+    num_blocks: int = 0               # 0 = fully provision every slot
+    max_len: int = 128                # per-request prompt+generation budget
+    max_prefills_per_step: int = 2    # admission rate limit per iteration
+    strategy: str = "dist_only"       # initial; the controller may switch it
+    predict_interval: int = 4         # iterations between re-plans
+    dup_slots: int = 1                # replica slots per EP rank
+    max_copies: int = 4               # Algorithm 1 C_max
+    ema: float = 0.9                  # estimator moving average
+    eos_id: int = -1                  # -1: generate exactly max_new_tokens
+    metrics_window: int = 16          # iterations per metrics window
+
+    def __post_init__(self):
+        if self.prefill_len % self.block_size:
+            raise ValueError("prefill_len must be a block_size multiple")
+        if self.num_blocks == 0:
+            per_slot = -(-self.max_len // self.block_size)
+            self.num_blocks = 1 + self.max_slots * per_slot   # +1: null block
+
+
+@dataclass
+class StepEvents:
+    """What one engine iteration did (host-side bookkeeping for drivers)."""
+    now: float
+    prefilled: List[ServeRequest] = dataclasses.field(default_factory=list)
+    completed: List[ServeRequest] = dataclasses.field(default_factory=list)
+    preempted: List[ServeRequest] = dataclasses.field(default_factory=list)
+    decoded_slots: int = 0
+    decision: Optional[object] = None          # controller Decision, if any
+
+
+class ContinuousEngine:
+    """Continuous-batching serving engine over a paged KV block pool.
+
+    Each ``step()`` is one mixed iteration: admit + prefill up to
+    ``max_prefills_per_step`` waiting requests into free slots, then run
+    ONE decode step for every running slot at its own position. Strategy
+    (none / dist_only / token_to_expert) and ``predict_interval`` are
+    runtime-mutable — an attached ``OnlineGPSController`` switches them as
+    the observed traffic skew drifts, with zero recompilation: the
+    placement plan and predictions are traced arguments, and both
+    prefill signatures (with/without predictions) compile once in
+    ``warmup()``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, ccfg: ContinuousConfig,
+                 mesh=None, ep_ranks: int = 1, predictor=None,
+                 controller=None):
+        if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
+            raise ValueError(f"{cfg.family}: continuous batching supports "
+                             "uniform-stack decoder-only architectures")
+        if cfg.attention != "gqa":
+            raise ValueError("paged KV cache is implemented for GQA")
+        if cfg.sliding_window and ccfg.prefill_len > cfg.sliding_window:
+            # decode applies the window as a mask over the linear pool, but
+            # prefill runs full-causal within the bucket — exact only while
+            # the bucket fits inside the window
+            raise ValueError(
+                f"prefill_len {ccfg.prefill_len} exceeds the model's "
+                f"sliding window {cfg.sliding_window}")
+        self.ccfg = ccfg
+        self.mesh = mesh
+        self.ep_ranks = ep_ranks
+        self.predictor = predictor
+        self.controller = controller
+        self.strategy = ccfg.strategy
+        self.predict_interval = ccfg.predict_interval
+        self.iterations = 0
+        self._plan_stack: Optional[PlacementPlan] = None
+
+        if cfg.is_moe:
+            # duplication slots are ALWAYS compiled in (even for strategy
+            # "none", which runs the identity plan) so switching strategy
+            # at runtime never changes a shape
+            self.moe_cfg = dataclasses.replace(
+                cfg.moe, duplication_slots=ccfg.dup_slots,
+                max_copies=ccfg.max_copies)
+            cfg = dataclasses.replace(cfg, moe=self.moe_cfg)
+            self.estimator = DistributionEstimator(
+                cfg.num_layers, cfg.moe.num_experts, ema=ccfg.ema)
+        else:
+            self.moe_cfg = None
+            self.estimator = None
+        self.cfg = cfg
+        self.params = params
+
+        use_dup = cfg.is_moe and ccfg.dup_slots > 0
+        # window_override = max_len disables rotating-window caches: the
+        # paged pool is linear in logical positions
+        self.rt = Runtime(mesh=mesh, ep=mesh is not None, ep_ranks=ep_ranks,
+                          use_duplication=use_dup,
+                          window_override=ccfg.max_len)
+
+        self.pool = init_block_pool(cfg, ccfg.num_blocks, ccfg.block_size)
+        self.allocator = BlockAllocator(ccfg.num_blocks, ccfg.block_size)
+        self.scheduler = ContinuousScheduler(
+            ccfg.max_slots, ccfg.prefill_len, ccfg.max_len, self.allocator,
+            max_prefills_per_step=ccfg.max_prefills_per_step)
+        self.metrics = ServeMetrics(window_iters=ccfg.metrics_window)
+        self._last_tokens = np.zeros((ccfg.max_slots,), np.int32)
+
+        self._prefill_fn = jax.jit(make_slot_prefill_step(cfg, self.rt))
+        self._decode_fn = jax.jit(make_paged_decode_step(cfg, self.rt))
+        self._write_fn = jax.jit(write_prefill_blocks)
+        self._temp_cache = init_cache(cfg, self.rt, 1, ccfg.prefill_len)
+        self._warm = False
+
+    # ------------------------------------------------------------------ plan
+    def _identity_stack(self) -> Optional[PlacementPlan]:
+        if not self.cfg.is_moe:
+            return None
+        m = self.moe_cfg
+        return stack_plans([
+            identity_plan(m.num_experts, self.ep_ranks, m.duplication_slots,
+                          m.max_copies) for _ in range(self.cfg.num_layers)])
+
+    def _current_plan(self) -> Optional[PlacementPlan]:
+        if self._plan_stack is None:
+            self._plan_stack = self._identity_stack()
+        return self._plan_stack
+
+    def replan(self):
+        """Algorithm 1 per layer from the estimator's current prediction."""
+        if not self.cfg.is_moe or self.strategy == "none":
+            self._plan_stack = self._identity_stack()
+            return self._plan_stack
+        m = self.moe_cfg
+        dist = self.estimator.predict()
+        plans = [duplicate_experts_host(dist[l], self.ep_ranks,
+                                        m.duplication_slots, m.max_copies).plan
+                 for l in range(self.cfg.num_layers)]
+        self._plan_stack = stack_plans(plans)
+        return self._plan_stack
+
+    # --------------------------------------------------------------- predict
+    def _shape_predictions(self, tokens: np.ndarray):
+        """(1, S) prompt -> (L, 1, S, K) predicted expert slots (the top-1
+        prediction broadcast over k). One definition site: warmup and
+        serving MUST build the identical jit signature."""
+        pred = self.predictor.predict(np.asarray(tokens))          # (L, 1, S)
+        K = self.moe_cfg.top_k
+        return jnp.asarray(pred)[..., None].repeat(K, -1)
+
+    def _predict_tokens(self, tokens: np.ndarray):
+        if self.strategy != "token_to_expert" or self.predictor is None:
+            return None
+        return self._shape_predictions(tokens)
+
+    # ---------------------------------------------------------------- warmup
+    def warmup(self):
+        """Compile every step signature once (both prefill variants when a
+        predictor is attached). Must run before any request is admitted —
+        it writes garbage into unallocated blocks."""
+        assert not self.scheduler.active_slots, "warmup() before serving"
+        ccfg = self.ccfg
+        toks = np.zeros((1, ccfg.prefill_len), np.int32)
+        tw = np.zeros((1, ccfg.prefill_len), np.float32)
+        last = jnp.zeros((1,), jnp.int32)
+        plan = self._current_plan()
+        table = jnp.zeros((ccfg.prefill_len // ccfg.block_size,), jnp.int32)
+        preds = [None]
+        if self.predictor is not None:
+            preds.append(self._shape_predictions(toks))
+        ctx = self.mesh or _nullcontext()
+        with ctx:
+            for pred in preds:
+                _, _, temp, _ = jax.block_until_ready(self._prefill_fn(
+                    self.params, {"tokens": jnp.asarray(toks)},
+                    self._temp_cache, plan, pred, last, jnp.asarray(tw)))
+            dec_toks = jnp.zeros((ccfg.max_slots, 1), jnp.int32)
+            tables = jnp.zeros(
+                (ccfg.max_slots, self.scheduler.tables.max_blocks_per_slot),
+                jnp.int32)
+            lens = jnp.zeros((ccfg.max_slots,), jnp.int32)
+            aw = jnp.zeros((ccfg.max_slots, 1), jnp.float32)
+            # run the steady-state write -> decode cycle TWICE: under a
+            # mesh the pool's sharding layout settles only after the first
+            # decode, and each distinct input layout is its own jit entry
+            for _ in range(2):
+                self.pool = jax.block_until_ready(
+                    self._write_fn(self.pool, temp, table))
+                out = self._decode_fn(self.params, dec_toks, self.pool,
+                                      tables, lens, plan, aw)
+                self.pool = jax.block_until_ready(out[2])
+        self._warm = True
+        self._compile_baseline = self.compile_counts()
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Per-step-function XLA cache sizes (for the no-recompile check)."""
+        out = {}
+        for name in ("_prefill_fn", "_decode_fn", "_write_fn"):
+            fn = getattr(self, name)
+            try:
+                out[name] = fn._cache_size()
+            except AttributeError:                      # older jit wrappers
+                out[name] = -1
+        return out
+
+    def assert_no_recompiles(self):
+        assert self._warm, "call warmup() first"
+        now = self.compile_counts()
+        assert all(v >= 0 for v in now.values()), (
+            "jit cache introspection unavailable on this jax version — "
+            f"the no-recompile guarantee cannot be checked: {now}")
+        assert now == self._compile_baseline, (
+            f"recompilation after warmup: {self._compile_baseline} -> {now}")
+
+    # ------------------------------------------------------------------ step
+    def submit(self, req: ServeRequest):
+        self.scheduler.submit(req)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def step(self, now: float, clock=None) -> StepEvents:
+        """One mixed prefill+decode iteration starting at (virtual) time
+        ``now``. ``clock``: optional zero-arg callable returning the
+        CURRENT virtual time, so first-token / completion timestamps
+        include the cost of the iteration that produced them (run_trace
+        wires this to the scaled wall clock); default: frozen at ``now``.
+        """
+        clock = clock or (lambda: now)
+        ccfg = self.ccfg
+        sched = self.scheduler
+        events = StepEvents(now=now)
+        iter_counts = None
+        prefill_tokens = 0
+        ctx = self.mesh or _nullcontext()
+        plan = self._current_plan()
+
+        splan: IterationPlan = sched.schedule(now)
+
+        # ---------------------------------------------------------- prefill
+        for req in splan.prefills:
+            slot = req.slot
+            S = ccfg.prefill_len
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :req.prompt_len] = req.tokens[:S]
+            tw = np.zeros((1, S), np.float32)
+            tw[0, :req.prompt_len] = 1.0
+            pred = self._predict_tokens(toks)
+            last = jnp.asarray([req.prompt_len - 1], jnp.int32)
+            table = jnp.asarray(
+                sched.tables.tables[slot, :S // ccfg.block_size], jnp.int32)
+            with ctx:
+                next_tok, _, temp, stats = self._prefill_fn(
+                    self.params, {"tokens": jnp.asarray(toks)},
+                    self._temp_cache, plan, pred, last, jnp.asarray(tw))
+                self.pool = self._write_fn(self.pool, temp, table)
+            tok0 = int(np.asarray(next_tok)[0, 0])
+            req.generated.append(tok0)
+            req.t_first_token = clock()
+            self._last_tokens[slot] = tok0
+            prefill_tokens += req.prompt_len
+            iter_counts = self._accumulate(iter_counts, stats)
+            events.prefilled.append(req)
+
+        # ----------------------------------------------------------- finish
+        # (requests whose whole budget was one token, or whose first token
+        # already hit EOS, never reach decode)
+        for slot in list(sched.active_slots):
+            self._maybe_finish(slot, clock(), events)
+
+        # ----------------------------------------------------------- decode
+        sched.ensure_decode_capacity(splan)
+        events.preempted = splan.preempted
+        decode_slots = [s for s in splan.decode_slots
+                        if sched.slots[s] is not None]
+        if decode_slots:
+            active = np.zeros((ccfg.max_slots, 1), np.float32)
+            active[decode_slots] = 1.0
+            with ctx:
+                next_tok, _, self.pool, stats = self._decode_fn(
+                    self.params, jnp.asarray(self._last_tokens[:, None]),
+                    self.pool, jnp.asarray(sched.tables.tables),
+                    jnp.asarray(sched.tables.lengths), plan,
+                    jnp.asarray(active))
+            nt = np.asarray(next_tok)
+            for slot in decode_slots:
+                req = sched.slots[slot]
+                tok = int(nt[slot, 0])
+                req.generated.append(tok)
+                sched.tables.lengths[slot] += 1
+                self._last_tokens[slot] = tok
+            iter_counts = self._accumulate(iter_counts, stats)
+            events.decoded_slots = len(decode_slots)
+            for slot in decode_slots:
+                self._maybe_finish(slot, clock(), events)
+
+        # ---------------------------------------------------------- observe
+        self.iterations += 1
+        if self.cfg.is_moe and iter_counts is not None:
+            self.estimator.update(iter_counts)
+            if (self.strategy != "none"
+                    and self.iterations % self.predict_interval == 0):
+                self.replan()
+        decision = None
+        if self.controller is not None and self.cfg.is_moe:
+            decision = self.controller.observe(iter_counts, now)
+            if decision is not None:
+                self._apply_decision(decision)
+        events.decision = decision
+
+        self.metrics.record_iteration(
+            now, clock() - now, prefill_tokens=prefill_tokens,
+            decode_tokens=len(decode_slots),
+            counts=iter_counts, plan=self._plan_stack,
+            ep_ranks=self.ep_ranks,
+            dup_slots=self.moe_cfg.duplication_slots if self.moe_cfg else 0,
+            strategy=self.strategy)
+        return events
+
+    # ----------------------------------------------------------- internals
+    def _accumulate(self, acc, stats):
+        if not self.cfg.is_moe or stats.get("expert_counts") is None:
+            return acc
+        c = np.asarray(stats["expert_counts"], np.float64)
+        return c if acc is None else acc + c
+
+    def _maybe_finish(self, slot: int, now: float, events: StepEvents):
+        req = self.scheduler.slots[slot]
+        if req is None:
+            return
+        hit_eos = (self.ccfg.eos_id >= 0 and req.generated
+                   and req.generated[-1] == self.ccfg.eos_id)
+        if req.done or hit_eos:
+            self.scheduler.finish_slot(slot, now)
+            self.metrics.record_completion(RequestTiming(
+                rid=req.rid, arrival=req.arrival,
+                t_first_token=req.t_first_token, t_finished=now,
+                prompt_len=req.prompt_len, new_tokens=len(req.generated),
+                n_preemptions=req.n_preemptions, tenant=req.tenant))
+            events.completed.append(req)
+
+    def _apply_decision(self, decision):
+        if decision.strategy != self.strategy:
+            self.strategy = decision.strategy
+            if self.strategy == "none":
+                self._plan_stack = self._identity_stack()
+            else:
+                self.replan()
+        self.predict_interval = decision.predict_interval
+
+    # ------------------------------------------------------------ trace run
+    def run_trace(self, requests: List[ServeRequest], *, max_iters: int = 0,
+                  time_scale: float = 1.0) -> float:
+        """Replay a trace on a virtual clock: each iteration costs its
+        measured wall time x ``time_scale``; idle gaps fast-forward to the
+        next arrival. ``time_scale > 1`` compresses a long trace horizon
+        into less wall time (every virtual second costs 1/scale wall
+        seconds of compute). Returns the virtual completion time."""
+        import time as _time
+        for r in sorted(requests, key=lambda r: r.arrival):
+            self.submit(r)
+        now = 0.0
+        iters = 0
+        while self.has_work():
+            if (not self.scheduler.active_slots and self.scheduler.waiting
+                    and self.scheduler.waiting[0].arrival > now):
+                now = self.scheduler.waiting[0].arrival
+            t0 = _time.perf_counter()
+            start = now
+            self.step(start, clock=lambda: start + (
+                _time.perf_counter() - t0) * time_scale)
+            now = start + (_time.perf_counter() - t0) * time_scale
+            iters += 1
+            if max_iters and iters >= max_iters:
+                break
+        self.metrics.flush(
+            self._plan_stack, self.ep_ranks,
+            self.moe_cfg.duplication_slots if self.moe_cfg else 0)
+        return now

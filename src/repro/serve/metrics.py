@@ -1,0 +1,210 @@
+"""SLO metrics for the serving subsystem.
+
+Per-request: TTFT (arrival -> first token), TPOT (mean inter-token time),
+end-to-end latency. Per-window: throughput, goodput (completions meeting
+their SLOs), measured skew, and per-rank load imbalance derived from the
+expert histogram + the ACTIVE placement plan (so the reported imbalance is
+what the cluster would carry under the engine's current duplication plan,
+not the raw expert skew).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.placement import PlacementPlan, plan_dims
+
+
+# ---------------------------------------------------------------------------
+# per-request accounting
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RequestTiming:
+    rid: int
+    arrival: float
+    t_first_token: float
+    t_finished: float
+    prompt_len: int
+    new_tokens: int
+    n_preemptions: int = 0
+    tenant: str = ""
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        if self.new_tokens <= 1:
+            return 0.0
+        return (self.t_finished - self.t_first_token) / (self.new_tokens - 1)
+
+    @property
+    def latency(self) -> float:
+        return self.t_finished - self.arrival
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+# ---------------------------------------------------------------------------
+# plan-aware imbalance
+# ---------------------------------------------------------------------------
+
+def plan_rank_loads(counts: np.ndarray, plan: Optional[PlacementPlan],
+                    ep_ranks: int, dup_slots: int) -> np.ndarray:
+    """Expected per-rank token load for one window.
+
+    counts: (L, E) expert histogram. Tokens for expert e split round-robin
+    over its ``n_replicas[e]`` copies (plan semantics); with no plan every
+    expert sits in its home slot. Returns (L, R) loads."""
+    counts = np.asarray(counts, np.float64)
+    L, E = counts.shape
+    e_loc, n_slots = plan_dims(E, ep_ranks, dup_slots)
+    loads = np.zeros((L, ep_ranks), np.float64)
+    if plan is None:
+        home_rank = np.arange(E) // e_loc
+        for l in range(L):
+            np.add.at(loads[l], home_rank, counts[l])
+        return loads
+    n_rep = np.asarray(plan.n_replicas)          # (L, E) stacked plans
+    table = np.asarray(plan.replica_table)       # (L, E, C_max)
+    for l in range(L):
+        for e in range(E):
+            k = max(int(n_rep[l, e]), 1)
+            share = counts[l, e] / k
+            for c in range(k):
+                rank = int(table[l, e, c]) // n_slots
+                loads[l, rank] += share
+    return loads
+
+
+def imbalance(loads: np.ndarray) -> float:
+    """max/mean over ranks, averaged over layers (1.0 = perfect)."""
+    loads = np.asarray(loads, np.float64)
+    mean = np.maximum(loads.mean(axis=-1), 1e-12)
+    return float((loads.max(axis=-1) / mean).mean())
+
+
+def window_skew(counts: np.ndarray) -> float:
+    """Measured skewness of an aggregated (L, E) expert histogram:
+    max share x E per layer, averaged over layers (paper Sec 2). The ONE
+    definition both the metrics windows and the GPS controller report —
+    the controller's switching signal must equal the printed skew column."""
+    c = np.asarray(counts, np.float64)
+    p = c / np.maximum(c.sum(axis=1, keepdims=True), 1e-12)
+    return float((p.max(axis=1) * p.shape[1]).mean())
+
+
+# ---------------------------------------------------------------------------
+# rolling serve metrics
+# ---------------------------------------------------------------------------
+
+@dataclass
+class WindowRecord:
+    t_start: float
+    t_end: float
+    iterations: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    completions: int = 0
+    skew: float = 0.0
+    imbalance: float = 1.0
+    strategy: str = ""
+
+
+class ServeMetrics:
+    """Collects per-iteration + per-request events; summarises SLOs."""
+
+    def __init__(self, window_iters: int = 16, slo_ttft: float = float("inf"),
+                 slo_tpot: float = float("inf")):
+        self.window_iters = window_iters
+        self.slo_ttft = slo_ttft
+        self.slo_tpot = slo_tpot
+        self.timings: List[RequestTiming] = []
+        self.windows: List[WindowRecord] = []
+        self._win_counts: Optional[np.ndarray] = None
+        self._win: Optional[WindowRecord] = None
+        self._t0: Optional[float] = None
+        self._t_last: float = 0.0
+
+    # ------------------------------------------------------------- per-iter
+    def record_iteration(self, now: float, dt: float, *, prefill_tokens: int,
+                         decode_tokens: int, counts: Optional[np.ndarray],
+                         plan: Optional[PlacementPlan], ep_ranks: int,
+                         dup_slots: int, strategy: str = ""):
+        if self._t0 is None:
+            self._t0 = now
+        self._t_last = now + dt
+        if self._win is None:
+            self._win = WindowRecord(t_start=now, t_end=now + dt,
+                                     strategy=strategy)
+        w = self._win
+        w.iterations += 1
+        w.t_end = now + dt
+        w.prefill_tokens += prefill_tokens
+        w.decode_tokens += decode_tokens
+        w.strategy = strategy
+        if counts is not None:
+            c = np.asarray(counts, np.float64)
+            self._win_counts = c if self._win_counts is None \
+                else self._win_counts + c
+        if w.iterations >= self.window_iters:
+            self._close_window(plan, ep_ranks, dup_slots)
+
+    def _close_window(self, plan, ep_ranks: int, dup_slots: int):
+        w = self._win
+        if w is None:
+            return
+        if self._win_counts is not None:
+            agg = self._win_counts
+            w.skew = window_skew(agg)
+            if ep_ranks > 1:
+                w.imbalance = imbalance(
+                    plan_rank_loads(agg, plan, ep_ranks, dup_slots))
+        self.windows.append(w)
+        self._win = None
+        self._win_counts = None
+
+    def flush(self, plan=None, ep_ranks: int = 1, dup_slots: int = 0):
+        self._close_window(plan, ep_ranks, dup_slots)
+
+    # ---------------------------------------------------------- per-request
+    def record_completion(self, t: RequestTiming):
+        self.timings.append(t)
+        if self._win is not None:
+            self._win.completions += 1
+
+    # -------------------------------------------------------------- summary
+    def summary(self) -> Dict[str, float]:
+        ts = self.timings
+        ttfts = [t.ttft for t in ts]
+        tpots = [t.tpot for t in ts if t.new_tokens > 1]
+        lats = [t.latency for t in ts]
+        horizon = max((self._t_last - self._t0) if self._t0 is not None
+                      else 0.0, 1e-9)
+        good = [t for t in ts
+                if t.ttft <= self.slo_ttft and t.tpot <= self.slo_tpot]
+        total_tokens = sum(t.new_tokens for t in ts)
+        return {
+            "completed": float(len(ts)),
+            "ttft_p50": _pct(ttfts, 50), "ttft_p99": _pct(ttfts, 99),
+            "tpot_mean": float(np.mean(tpots)) if tpots else 0.0,
+            "tpot_p99": _pct(tpots, 99),
+            "latency_p50": _pct(lats, 50), "latency_p99": _pct(lats, 99),
+            "throughput_tok_s": total_tokens / horizon,
+            "throughput_req_s": len(ts) / horizon,
+            "goodput_req_s": len(good) / horizon,
+            "preemptions": float(sum(t.n_preemptions for t in ts)),
+        }
+
+    def imbalance_over_time(self) -> List[float]:
+        return [w.imbalance for w in self.windows]
+
+    def skew_over_time(self) -> List[float]:
+        return [w.skew for w in self.windows]

@@ -120,6 +120,43 @@ def make_prefill_replan_step(cfg: ModelConfig, rt: Runtime):
     return step
 
 
+def make_slot_prefill_step(cfg: ModelConfig, rt: Runtime):
+    """Continuous-batching prefill: one request padded to a fixed bucket.
+
+    Differences from ``make_prefill_step``: logits are gathered at the
+    request's REAL last prompt token (``last_pos``), and ``token_weight``
+    masks padding out of the MoE expert histograms. Everything is traced,
+    so one compile per prompt-length bucket."""
+    def prefill_step(params, batch, cache, plan=None, predicted_idx=None,
+                     last_pos=None, token_weight=None):
+        logits, cache, stats = forward(params, cfg, batch, rt, mode="prefill",
+                                       cache=cache, plan=plan,
+                                       predicted_idx=predicted_idx,
+                                       last_pos=last_pos,
+                                       token_weight=token_weight)
+        next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache, stats
+    return prefill_step
+
+
+def make_paged_decode_step(cfg: ModelConfig, rt: Runtime):
+    """Continuous-batching decode over the paged KV block pool.
+
+    All slots advance one token at their OWN position (``lengths`` is a
+    traced (B,) vector — no recompilation as requests join/leave). Returns
+    greedy next tokens for every slot; the engine masks idle slots."""
+    def decode_step(params, tokens, pool, block_tables, lengths, plan=None,
+                    token_weight=None):
+        logits, pool, stats = forward(params, cfg, {"tokens": tokens}, rt,
+                                      mode="decode", cache=pool,
+                                      cache_len=lengths, plan=plan,
+                                      block_tables=block_tables,
+                                      token_weight=token_weight)
+        next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, pool, stats
+    return decode_step
+
+
 def make_decode_step(cfg: ModelConfig, rt: Runtime):
     def decode_step(params, tokens, cache, cache_len, plan=None):
         logits, cache, stats = forward(params, cfg, {"tokens": tokens}, rt,

@@ -1,0 +1,17 @@
+"""Trace-driven serving workloads.
+
+Arrival processes (Poisson / bursty MMPP / diurnal), topic-shifting token
+corpora (so expert skew MOVES over a serving session, the condition the
+online GPS controller exists for), and multi-tenant trace assembly.
+"""
+from repro.workloads.arrivals import (bursty_arrivals, diurnal_arrivals,
+                                      poisson_arrivals)
+from repro.workloads.corpus import ShiftingCorpus, Topic
+from repro.workloads.traces import (TenantSpec, TraceRequest, make_trace,
+                                    skew_shift_trace, to_serve_requests)
+
+__all__ = [
+    "ShiftingCorpus", "TenantSpec", "Topic", "TraceRequest",
+    "bursty_arrivals", "diurnal_arrivals", "make_trace", "poisson_arrivals",
+    "skew_shift_trace", "to_serve_requests",
+]
