@@ -1,0 +1,120 @@
+"""Dispatch hot-path benchmark: sort-based vs one-hot send-buffer packing.
+
+Times every dispatch phase (route / pack / a2a / ffn / combine, see
+`repro.moe.profile`) for both ``dispatch_impl`` formulations on the same
+shapes, verifies on the way that the two packers produce bit-identical
+send buffers / stats / drop decisions, and writes the machine-readable
+``BENCH_dispatch.json`` consumed by the CI bench-regression gate.
+
+The key derived quantity is ``pack_speedup`` — how much faster the
+argsort+gather packer builds the send buffer than the one-hot scatter
+oracle. Route/a2a/ffn/combine are impl-independent and reported for
+context (they are the costs MoE-GPS weighs a predictor against).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _check_pack_equivalence(T: int, K: int, S: int, cap: int, seed: int = 0):
+    """The benchmark doubles as a spot-check: both packers must agree
+    exactly (send buffer, mask, destinations, counts, drops)."""
+    from repro.moe.dispatch import _pack_onehot, _pack_sort
+    rng = np.random.default_rng(seed)
+    N = T * K
+    x = jnp.asarray(rng.normal(size=(T, 16)), jnp.float32)
+    token_of = jnp.arange(N, dtype=jnp.int32) // K
+    gslot = jnp.asarray(rng.integers(0, S, N), jnp.int32)
+    valid = jnp.asarray(rng.random(N) < 0.9)
+    a = _pack_onehot(x, token_of, gslot, valid, num_classes=S, cap=cap)
+    b = _pack_sort(x, token_of, gslot, valid, num_classes=S, cap=cap)
+    names = ("send", "in_cap", "dest", "counts", "dropped")
+    for av, bv, name in zip(a, b, names):
+        assert np.array_equal(np.asarray(av), np.asarray(bv)), (
+            f"sort/onehot packers disagree on {name}")
+
+
+def run(verbose: bool = True, smoke: bool = None):
+    from repro.moe.profile import (PHASES, dispatch_phase_times,
+                                   pack_impl_times)
+
+    if smoke is None:
+        smoke = _smoke()
+    if smoke:
+        shape = dict(tokens=4096, num_experts=64, top_k=2, d_model=256,
+                     d_ff=128, ranks=4, capacity_factor=1.25)
+        iters = 10
+    else:
+        shape = dict(tokens=8192, num_experts=128, top_k=2, d_model=256,
+                     d_ff=256, ranks=8, capacity_factor=1.25)
+        iters = 12
+
+    _check_pack_equivalence(T=512, K=2, S=shape["num_experts"], cap=24)
+
+    # full per-phase context on the default (sort) pipeline, then the
+    # impl-dependent phase head-to-head with interleaved measurement so
+    # machine drift can't skew the ratio
+    phases = dispatch_phase_times(impl="sort", iters=iters, **shape)
+    pack_shape = {k: shape[k] for k in ("tokens", "num_experts", "top_k",
+                                        "d_model", "capacity_factor")}
+    pack = pack_impl_times(iters=iters, **pack_shape)
+    shared = {k: phases[k] for k in PHASES if k != "pack"}
+    totals = {impl: sum(shared.values()) + pack[impl] for impl in pack}
+    speedup = pack["onehot"] / max(pack["sort"], 1e-12)
+    e2e = totals["onehot"] / max(totals["sort"], 1e-12)
+
+    doc = {
+        "schema": 1,
+        "smoke": smoke,
+        "config": shape,
+        "shared_phases_us": {k: v * 1e6 for k, v in shared.items()},
+        "pack_us": {impl: v * 1e6 for impl, v in pack.items()},
+        "total_us": {impl: v * 1e6 for impl, v in totals.items()},
+        "pack_speedup": speedup,
+        "total_speedup": e2e,
+    }
+    out_dir = os.environ.get("REPRO_BENCH_OUT", ".")
+    path = os.path.join(out_dir, "BENCH_dispatch.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+
+    if verbose:
+        print(f"shapes: {shape}")
+        print(f"{'phase':8s} {'sort':>10s} {'onehot':>10s}")
+        for k in PHASES:
+            s = pack["sort"] if k == "pack" else shared[k]
+            o = pack["onehot"] if k == "pack" else shared[k]
+            print(f"{k:8s} {s*1e6:9.0f}us {o*1e6:9.0f}us")
+        print(f"{'total':8s} {totals['sort']*1e6:9.0f}us "
+              f"{totals['onehot']*1e6:9.0f}us")
+        print(f"pack speedup (onehot/sort): {speedup:.2f}x | "
+              f"end-to-end {e2e:.2f}x | wrote {path}")
+
+    # policy lives in benchmarks/check_regression.py (pack_speedup >= 1.0
+    # gates CI); here just flag a below-par measurement for the log
+    if verbose and speedup < 1.3:
+        print(f"NOTE: pack speedup {speedup:.2f}x below the 1.3x target "
+              "(noisy runner?) — the CI gate fails only below 1.0x")
+
+    summary = {"pack_speedup": speedup, "total_speedup": e2e,
+               "sort_pack_us": pack["sort"] * 1e6,
+               "onehot_pack_us": pack["onehot"] * 1e6}
+    for k, v in shared.items():
+        summary[f"{k}_us"] = v * 1e6
+    derived = (f"pack_speedup={speedup:.2f}x total_speedup={e2e:.2f}x "
+               f"sort_pack={pack['sort']*1e6:.0f}us "
+               f"onehot_pack={pack['onehot']*1e6:.0f}us")
+    return summary, derived
+
+
+if __name__ == "__main__":
+    run(verbose=True)

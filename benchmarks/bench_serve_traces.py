@@ -77,6 +77,7 @@ def run(verbose: bool = True, smoke: bool = None):
     end = eng.run_trace(to_serve_requests(trace), time_scale=20.0)
     eng.assert_no_recompiles()
 
+    phases = eng.profile_phases(iters=2 if smoke else 5)
     s = eng.metrics.summary()
     n_completed = int(s["completed"])
     n_switches = controller.num_switches
@@ -100,6 +101,13 @@ def run(verbose: bool = True, smoke: bool = None):
         print("\ncontroller switches:")
         for line in controller.switch_log():
             print("  " + line)
+        if phases:
+            print("\ndispatch phase breakdown (prefill shape, "
+                  f"impl={eng.moe_cfg.dispatch_impl}):")
+            total = phases.get("total", 0.0) or 1.0
+            for k in ("route", "pack", "a2a", "ffn", "combine"):
+                print(f"  {k:8s} {phases[k]*1e6:9.0f}us "
+                      f"({100.0 * phases[k] / total:4.1f}%)")
 
     assert n_completed == len(trace), (n_completed, len(trace))
     if not smoke:

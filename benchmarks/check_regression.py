@@ -1,0 +1,113 @@
+"""CI bench-regression gate.
+
+Usage:
+  python -m benchmarks.check_regression BENCH_smoke.json \
+      [--baseline benchmarks/baseline.json] [--tol 0.25]
+
+Compares a fresh ``benchmarks/run.py --smoke --json`` document against the
+committed baseline and FAILS (exit 1) when:
+
+  * total smoke wall time regressed by more than ``--tol`` (default 25%),
+  * any bench that passed in the baseline now fails, or
+  * the dispatch bench's measured pack speedup fell below 1.0 (the sort
+    hot path must never be slower than the one-hot oracle it replaced).
+
+Escape hatch: set ``REPRO_BENCH_REFRESH_BASELINE=1`` to overwrite the
+baseline with the current measurement instead of gating (use when a
+deliberate change moves the floor; commit the refreshed file).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def compare(current: dict, baseline: dict, tol: float) -> list:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    failures = []
+    base_total = baseline.get("total_wall_s", 0.0)
+    cur_total = current.get("total_wall_s", 0.0)
+    if base_total > 0 and cur_total > base_total * (1.0 + tol):
+        failures.append(
+            f"total smoke wall time regressed: {cur_total:.1f}s vs baseline "
+            f"{base_total:.1f}s (+{100 * (cur_total / base_total - 1):.0f}%, "
+            f"tolerance {100 * tol:.0f}%)")
+    for name, base_rec in baseline.get("benches", {}).items():
+        cur_rec = current.get("benches", {}).get(name)
+        if cur_rec is None:
+            failures.append(f"bench disappeared from the suite: {name}")
+            continue
+        if base_rec.get("ok") and not cur_rec.get("ok"):
+            failures.append(f"bench now failing: {name}: "
+                            f"{cur_rec.get('derived')}")
+    disp = (current.get("benches", {})
+            .get("dispatch_phase_breakdown", {}).get("summary") or {})
+    speedup = disp.get("pack_speedup")
+    if speedup is not None and speedup < 1.0:
+        failures.append(
+            f"sort dispatch slower than the one-hot oracle: "
+            f"pack_speedup={speedup:.2f}x")
+    return failures
+
+
+def report(current: dict, baseline: dict):
+    print(f"{'bench':32s} {'baseline':>12s} {'current':>12s} {'delta':>8s}")
+    for name, base_rec in baseline.get("benches", {}).items():
+        cur_rec = current.get("benches", {}).get(name, {})
+        b, c = base_rec.get("wall_us", 0.0), cur_rec.get("wall_us", 0.0)
+        delta = f"{100 * (c / b - 1):+5.0f}%" if b else "n/a"
+        print(f"{name:32s} {b / 1e6:11.1f}s {c / 1e6:11.1f}s {delta:>8s}")
+    print(f"{'TOTAL':32s} {baseline.get('total_wall_s', 0.0):11.1f}s "
+          f"{current.get('total_wall_s', 0.0):11.1f}s")
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    tol = 0.25
+    baseline_path = os.path.join(os.path.dirname(__file__), "baseline.json")
+    if "--tol" in argv:
+        i = argv.index("--tol")
+        tol = float(argv[i + 1])
+        del argv[i:i + 2]
+    if "--baseline" in argv:
+        i = argv.index("--baseline")
+        baseline_path = argv[i + 1]
+        del argv[i:i + 2]
+    if len(argv) != 1:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        current = json.load(f)
+
+    if os.environ.get("REPRO_BENCH_REFRESH_BASELINE") == "1":
+        with open(baseline_path, "w") as f:
+            json.dump(current, f, indent=2)
+        print(f"baseline refreshed from {argv[0]} -> {baseline_path} "
+              "(commit the updated file)")
+        return 0
+
+    if not os.path.exists(baseline_path):
+        print(f"no baseline at {baseline_path}; run with "
+              "REPRO_BENCH_REFRESH_BASELINE=1 to create one", file=sys.stderr)
+        return 2
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+
+    report(current, baseline)
+    failures = compare(current, baseline, tol)
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        print("  (deliberate change? refresh with "
+              "REPRO_BENCH_REFRESH_BASELINE=1 and commit baseline.json)",
+              file=sys.stderr)
+        return 1
+    print("\nbench-regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,6 @@
 """Benchmark harness: one entry per paper table/figure + serving traces.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [name ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH] [name ...]
 
 Prints a ``name,us_per_call,derived`` CSV line per benchmark, where
 ``derived`` is the benchmark's key reproduced quantity (see each module).
@@ -8,13 +8,39 @@ Prints a ``name,us_per_call,derived`` CSV line per benchmark, where
 ``--smoke``: seconds-scale configurations (exported to the bench modules
 via ``REPRO_BENCH_SMOKE=1``) so CI can exercise every benchmark end to
 end without reproducing the full figures.
+
+``--json PATH``: additionally write a machine-readable result document
+shared by all benches (the schema the CI bench-regression gate and the
+BENCH_* trajectory tracking consume):
+
+  {"schema": 1, "smoke": bool, "total_wall_s": float,
+   "benches": {name: {"wall_us": float, "ok": bool, "derived": str,
+                      "summary": {metric: number, ...} | null}}}
+
+Benches whose ``run()`` returns a dict of scalars as its first element get
+that dict embedded as ``summary``. ``benchmarks/bench_dispatch`` also
+emits its own ``BENCH_dispatch.json`` phase-breakdown artifact.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
+
+
+def _scalar_summary(obj):
+    """First element of a bench's return value, kept only if it is a flat
+    dict of JSON-safe scalars (the shared schema stores metrics, not blobs)."""
+    if not isinstance(obj, dict):
+        return None
+    out = {}
+    for k, v in obj.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float, str)):
+            return None
+        out[str(k)] = v
+    return out
 
 
 def main(argv=None) -> int:
@@ -22,10 +48,20 @@ def main(argv=None) -> int:
     if "--smoke" in argv:
         argv.remove("--smoke")
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            print("--json requires a PATH argument", file=sys.stderr)
+            return 2
+        del argv[i:i + 2]
 
     # import AFTER the env flag so modules can read it at import time too
-    from benchmarks import (bench_appendix_c, bench_dup_overhead, bench_fig4,
-                            bench_fig6, bench_fig7, bench_runtime_balance,
+    from benchmarks import (bench_appendix_c, bench_dispatch,
+                            bench_dup_overhead, bench_fig4, bench_fig6,
+                            bench_fig7, bench_runtime_balance,
                             bench_serve_traces, bench_table1)
     benches = {
         "table1_skew_vs_error": bench_table1.run,
@@ -36,6 +72,7 @@ def main(argv=None) -> int:
         "runtime_measured_balance": bench_runtime_balance.run,
         "appendix_c_generality": bench_appendix_c.run,
         "serve_traces_continuous": bench_serve_traces.run,
+        "dispatch_phase_breakdown": bench_dispatch.run,
     }
 
     names = argv or list(benches)
@@ -46,17 +83,35 @@ def main(argv=None) -> int:
         return 2
     print("name,us_per_call,derived")
     failures = 0
+    records = {}
+    t_all = time.time()
     for name in names:
         fn = benches[name]
         t0 = time.time()
         try:
-            _, derived = fn(verbose=True)
+            first, derived = fn(verbose=True)
             us = (time.time() - t0) * 1e6
             print(f"{name},{us:.0f},{derived}")
+            records[name] = {"wall_us": us, "ok": True,
+                             "derived": str(derived),
+                             "summary": _scalar_summary(first)}
         except Exception as e:      # keep the harness going
             failures += 1
             print(f"{name},FAILED,{type(e).__name__}: {e}")
+            records[name] = {"wall_us": (time.time() - t0) * 1e6, "ok": False,
+                             "derived": f"{type(e).__name__}: {e}",
+                             "summary": None}
         sys.stdout.flush()
+    if json_path:
+        doc = {
+            "schema": 1,
+            "smoke": os.environ.get("REPRO_BENCH_SMOKE") == "1",
+            "total_wall_s": time.time() - t_all,
+            "benches": records,
+        }
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {json_path}")
     return 1 if failures else 0
 
 

@@ -29,6 +29,11 @@ class MoEConfig:
     # Paper technique knobs -------------------------------------------------
     max_copies: int = 4                  # Algorithm 1 C_max
     duplication_slots: int = 0           # extra expert slots per EP rank (0 = E/ranks)
+    # Dispatch hot path -----------------------------------------------------
+    # "sort": argsort + cumsum-offset send-buffer packing (fast path);
+    # "onehot": (N, S) one-hot cumsum + scatter (reference oracle).
+    # Both produce bit-identical send buffers, stats and drop decisions.
+    dispatch_impl: str = "sort"
 
 
 @dataclass(frozen=True)

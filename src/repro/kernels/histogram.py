@@ -55,3 +55,17 @@ def histogram(idx, num_classes: int, *, bn: int = DEFAULT_BN,
         interpret=interpret,
     )(idx)
     return out[0]
+
+
+def histogram_offsets(idx, num_classes: int, *, bn: int = DEFAULT_BN,
+                      interpret: bool = True):
+    """Class histogram plus its exclusive prefix sum (slot start offsets).
+
+    The sort-based dispatch packer consumes exactly this pair: counts give
+    each slot's fill level, offsets give where each slot's contiguous run
+    begins in the argsorted token order. Returns (counts, starts), both
+    (num_classes,) int32.
+    """
+    counts = histogram(idx, num_classes, bn=bn, interpret=interpret)
+    starts = jnp.cumsum(counts) - counts
+    return counts, starts

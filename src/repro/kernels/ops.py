@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.kernels import histogram as _hist
 from repro.kernels import moe_gemm as _mg
 from repro.kernels import rg_lru as _rg
+from repro.kernels import topk_router as _tk
 
 
 def _interpret() -> bool:
@@ -33,6 +34,19 @@ def expert_histogram(expert_idx, num_experts: int):
     """(..., K) int32 expert assignments -> (num_experts,) int32 counts."""
     return _hist.histogram(expert_idx.reshape(-1).astype(jnp.int32),
                            num_experts, interpret=_interpret())
+
+
+def histogram_offsets(idx, num_classes: int):
+    """(N,) int32 class ids -> (counts, exclusive-prefix starts), both
+    (num_classes,) int32 — the sort-based dispatch packer's slot layout."""
+    return _hist.histogram_offsets(idx.reshape(-1).astype(jnp.int32),
+                                   num_classes, interpret=_interpret())
+
+
+def fused_topk_route(logits, top_k: int):
+    """(T, E) router logits -> (idx, gates, probs, lse, counts) in one
+    fused pass (see `repro.kernels.topk_router`)."""
+    return _tk.fused_topk_route(logits, top_k, interpret=_interpret())
 
 
 def rg_lru_scan(a, b, h0):

@@ -232,7 +232,8 @@ def init_cache(cfg: ModelConfig, rt: Runtime, batch: int, max_len: int,
 
 def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
                predicted_l, decode: bool, token_weight=None):
-    """x: (B, S, d). Returns (y, expert_counts (E,), aux, z).
+    """x: (B, S, d). Returns (y, expert_counts (E,), slot_counts, aux, z,
+    dropped).
 
     ``token_weight``: optional (B, S) per-token weight for the expert
     histogram — the continuous-batching engine passes the active/padding
@@ -250,7 +251,8 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
                              moe.top_k))
         counts = jnp.zeros((moe.num_experts,), jnp.float32).at[
             router_out.expert_idx.reshape(-1)].add(w)
-        return y, counts, counts, router_out.aux_loss, router_out.z_loss
+        return (y, counts, counts, router_out.aux_loss, router_out.z_loss,
+                jnp.asarray(0, jnp.int32))    # dense path never drops
 
     mesh = rt.mesh
     baxes = _batch_axes(mesh)
@@ -292,9 +294,14 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
         x_spec = P(baxes if baxes else None, "model", None)
         dispatch_fn = ep.ep_moe_ffn
 
+    # kernel runs fuse routing (softmax/top-k/histogram) into one Pallas
+    # pass when the sort dispatch pipeline is active
+    router_impl = ("fused" if rt.use_kernel and moe.dispatch_impl == "sort"
+                   else "dense")
+
     def inner(x_blk, router_w, experts_w, plan, pred, w_blk):
         t = x_blk.reshape(-1, x_blk.shape[-1])
-        router_out = route(router_w, moe, t)
+        router_out = route(router_w, moe, t, impl=router_impl)
         y, stats = dispatch_fn(
             t, router_out, experts_w, plan, moe,
             axis_name=rt.ep_axis, ep_ranks=rt.ep_ranks,
@@ -303,7 +310,7 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
             predicted_idx=pred.reshape(-1, moe.top_k) if pred is not None else None,
             use_kernel=rt.use_kernel)
         counts, slots = stats.expert_counts, stats.slot_counts
-        aux, z = stats.aux_loss, stats.z_loss
+        aux, z, dropped = stats.aux_loss, stats.z_loss, stats.dropped
         if w_blk is not None:
             # weighted histogram replaces the dispatch count (padding /
             # idle-slot tokens carry weight 0). Prefill tokens are
@@ -321,15 +328,16 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
             slots = jax.lax.psum(slots, baxes)
             aux = jax.lax.pmean(aux, baxes)
             z = jax.lax.pmean(z, baxes)
-        return y.reshape(x_blk.shape), counts, slots, aux, z
+            dropped = jax.lax.psum(dropped, baxes)
+        return y.reshape(x_blk.shape), counts, slots, aux, z, dropped
 
     plan_specs = PlacementPlan(P(), P(), P(), P())
     pred_spec = None if predicted_l is None else x_spec
     w_spec = None if token_weight is None else P(*x_spec[:-1])
-    y, counts, slot_counts, aux, z = shard_map(
+    y, counts, slot_counts, aux, z, dropped = shard_map(
         inner, mesh=mesh,
         in_specs=(x_spec, P(), expert_specs, plan_specs, pred_spec, w_spec),
-        out_specs=(x_spec, P(), P(), P(), P()),
+        out_specs=(x_spec, P(), P(), P(), P(), P()),
         check_vma=False,
     )(x, layer_p["moe"]["router"], layer_p["moe"]["experts"], plan_l,
       predicted_l, token_weight)
@@ -338,7 +346,7 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
         y = y + ffn(layer_p["moe"]["shared"], x, cfg.activation)
     if "dense" in layer_p["moe"]:
         y = y + ffn(layer_p["moe"]["dense"], x, cfg.activation)
-    return y, counts, slot_counts, aux, z
+    return y, counts, slot_counts, aux, z, dropped
 
 
 # ---------------------------------------------------------------------------
@@ -348,7 +356,8 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
 def _zero_stats(cfg):
     E = cfg.moe.num_experts if cfg.is_moe else 1
     return (jnp.zeros((E,), jnp.float32), jnp.zeros((E,), jnp.float32),
-            jnp.asarray(0.0, jnp.float32), jnp.asarray(0.0, jnp.float32))
+            jnp.asarray(0.0, jnp.float32), jnp.asarray(0.0, jnp.float32),
+            jnp.asarray(0, jnp.int32))
 
 
 def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
@@ -414,10 +423,10 @@ def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
 
     h = apply_norm(cfg.norm, layer_p["ln2"], x)
     if cfg.is_moe:
-        y, counts, slots, aux, z = _moe_apply(
+        y, counts, slots, aux, z, dropped = _moe_apply(
             layer_p, cfg, h, rt, plan_l, predicted_l,
             decode=(mode == "decode"), token_weight=token_weight)
-        stats = (counts, slots, aux, z)
+        stats = (counts, slots, aux, z, dropped)
     else:
         y = ffn(layer_p["ffn"], h, cfg.activation)
         stats = _zero_stats(cfg)
@@ -621,9 +630,10 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
               pred if pred is not None else _none_stack(L))
         x, (new_cache, layer_stats) = jax.lax.scan(body, x, xs)
         if cfg.is_moe:
-            counts, slots, aux, z = layer_stats
+            counts, slots, aux, z, dropped = layer_stats
             stats = {"expert_counts": counts, "slot_counts": slots,
-                     "aux_loss": aux.sum(), "z_loss": z.sum()}
+                     "aux_loss": aux.sum(), "z_loss": z.sum(),
+                     "dropped": dropped}       # (L,) per-layer drop counts
         if mode == "train":
             new_cache = None
 

@@ -11,8 +11,10 @@ Pipeline per rank (T = local tokens, S = R * n_slots global slots):
      the duplication overhead and is visible in the roofline).
   2. route tokens (true router or an external predicted assignment).
   3. pick a replica per (token, k): round-robin over ``n_replicas[e]``.
-  4. capacity-dispatch: scatter tokens into a (S * C, d) send buffer,
-     ``all_to_all`` over the model axis.
+  4. capacity-dispatch: pack tokens into a (S * C, d) send buffer —
+     argsort + histogram-offset gather (``dispatch_impl="sort"``, the
+     fast path) or one-hot cumsum + scatter (``"onehot"``, the reference
+     oracle) — then ``all_to_all`` over the model axis.
   5. grouped expert FFN on the received (n_slots, R * C, d) block
      (pure-jnp einsum or the Pallas ``moe_gemm`` kernel).
   6. reverse ``all_to_all``; weighted combine with router gates.
@@ -57,6 +59,80 @@ def _positions_in_slot(gslot: jnp.ndarray, num_slots: int) -> jnp.ndarray:
     oh = jax.nn.one_hot(gslot, num_slots, dtype=jnp.int32)      # (N, S)
     pos = jnp.cumsum(oh, axis=0) - 1
     return jnp.take_along_axis(pos, gslot[:, None], axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# send-buffer packing (the dispatch hot path)
+#
+# Both packers share one contract: assignments (token_of, gslot, valid) plus
+# a per-slot capacity produce a zero-padded (num_classes * cap, d) send
+# buffer, in-capacity mask, send-buffer destinations, per-slot counts and the
+# dropped-token count. The drop rule is FIRST-COME within each slot in token
+# order — ``_pack_sort`` relies on ``argsort`` stability to reproduce the
+# one-hot oracle's decisions bit for bit.
+# ---------------------------------------------------------------------------
+
+def _pack_onehot(x, token_of, gslot, valid, *, num_classes: int, cap: int,
+                 use_kernel: bool = False):
+    """Reference oracle: (N, S+1) one-hot cumsum positions + scatter.
+
+    O(N * S) work and a serialized scatter — the slowest correct
+    formulation, kept as the equivalence oracle for ``_pack_sort``.
+    """
+    del use_kernel
+    d = x.shape[1]
+    g = jnp.where(valid, gslot, num_classes)        # invalid -> overflow class
+    pos = _positions_in_slot(g, num_classes + 1)    # invalid don't eat capacity
+    in_cap = (pos < cap) & valid
+    dest = jnp.where(in_cap, g * cap + pos, num_classes * cap)
+    send = jnp.zeros((num_classes * cap + 1, d), x.dtype).at[dest].set(
+        x[token_of], mode="drop")[:-1]
+    counts = jnp.zeros((num_classes,), jnp.int32).at[
+        jnp.minimum(g, num_classes - 1)].add(in_cap.astype(jnp.int32))
+    dropped = (valid & ~in_cap).sum()
+    return send, in_cap, dest, counts, dropped
+
+
+def _pack_sort(x, token_of, gslot, valid, *, num_classes: int, cap: int,
+               use_kernel: bool = False):
+    """Fast path: stable argsort + histogram-offset slot assignment.
+
+    Positions within a slot come from a class histogram's exclusive prefix
+    sum instead of an (N, S) one-hot cumsum, and the send buffer is built
+    by GATHERING the sorted tokens into each slot's contiguous range
+    instead of scattering — O(N log N + S*cap) and fully vectorizable.
+    ``use_kernel`` routes the histogram through the Pallas kernel (TPU).
+    """
+    d = x.shape[1]
+    N = gslot.shape[0]
+    g = jnp.where(valid, gslot, num_classes)        # invalid -> overflow class
+    order = jnp.argsort(g)                          # stable: token order kept
+    g_sorted = g[order]
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        hist, starts = kernel_ops.histogram_offsets(g, num_classes + 1)
+    else:
+        hist = jnp.zeros((num_classes + 1,), jnp.int32).at[g].add(1)
+        starts = jnp.cumsum(hist) - hist            # exclusive prefix sum
+    pos_sorted = jnp.arange(N, dtype=jnp.int32) - starts[g_sorted]
+    pos = jnp.zeros((N,), jnp.int32).at[order].set(pos_sorted)
+    in_cap = (pos < cap) & valid
+    dest = jnp.where(in_cap, g * cap + pos, num_classes * cap)
+    # slot s's send range [s*cap, s*cap + min(hist[s], cap)) gathers the
+    # sorted run starting at starts[s]; the rest of the buffer stays zero.
+    fill = starts[:num_classes, None] + jnp.arange(cap, dtype=jnp.int32)
+    fill_ok = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+               < jnp.minimum(hist[:num_classes], cap)[:, None])
+    tok_sorted = token_of[order]                                # (N,)
+    src = tok_sorted[jnp.clip(fill, 0, N - 1)]                  # (S, cap)
+    send = jnp.where(fill_ok[..., None], x[src], 0).reshape(
+        num_classes * cap, d)
+    counts = jnp.minimum(hist[:num_classes], cap)
+    dropped = jnp.maximum(hist[:num_classes] - cap, 0).sum()
+    return send, in_cap, dest, counts, dropped
+
+
+_PACKERS = {"onehot": _pack_onehot, "sort": _pack_sort}
 
 
 def choose_replica(plan: PlacementPlan, expert: jnp.ndarray,
@@ -108,12 +184,13 @@ def grouped_ffn(slot_w: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
 
 def _dispatch_round(x, gslot, valid, *, num_slots: int, ranks: int, cap: int,
                     axis_name: str, slot_w: dict, activation: str,
-                    use_kernel: bool = False):
+                    use_kernel: bool = False, impl: str = "sort"):
     """One dispatch -> FFN -> combine round.
 
     x: (T, d); gslot, valid: (N,) flattened (token, k) assignments with
     token index = n // K. Returns y_flat: (N, d) per-assignment outputs
     (zeros where dropped/invalid) plus per-slot counts and drop count.
+    ``impl`` selects the send-buffer packer (see ``_PACKERS``).
     """
     T, d = x.shape
     N = gslot.shape[0]
@@ -121,13 +198,9 @@ def _dispatch_round(x, gslot, valid, *, num_slots: int, ranks: int, cap: int,
     S = ranks * num_slots
     token_of = jnp.arange(N, dtype=jnp.int32) // K
 
-    gslot = jnp.where(valid, gslot, S)              # invalid -> overflow class
-    pos = _positions_in_slot(gslot, S + 1)          # invalid don't eat capacity
-    in_cap = (pos < cap) & valid
-    dest = jnp.where(in_cap, gslot * cap + pos, S * cap)
-
-    send = jnp.zeros((S * cap + 1, d), x.dtype).at[dest].set(
-        x[token_of], mode="drop")[:-1]
+    send, in_cap, dest, slot_counts, dropped = _PACKERS[impl](
+        x, token_of, gslot, valid, num_classes=S, cap=cap,
+        use_kernel=use_kernel)
     send = send.reshape(ranks, num_slots * cap, d)
     recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
                               tiled=False)
@@ -147,9 +220,6 @@ def _dispatch_round(x, gslot, valid, *, num_slots: int, ranks: int, cap: int,
                                 tiled=False).reshape(S * cap, d)
     y_flat = jnp.where(in_cap[:, None],
                        y_recv[jnp.minimum(dest, S * cap - 1)], 0.0)
-    slot_counts = jnp.zeros((S,), jnp.int32).at[
-        jnp.minimum(gslot, S - 1)].add(in_cap.astype(jnp.int32))
-    dropped = (valid & ~in_cap).sum()
     return y_flat, slot_counts, dropped
 
 
@@ -187,13 +257,14 @@ def ep_moe_ffn(
     salt = (jnp.arange(T, dtype=jnp.int32)[:, None] + jnp.arange(K)[None, :])
     flat = lambda a: a.reshape(-1)
 
+    impl = moe.dispatch_impl
     if predicted_idx is None:
         gslot = choose_replica(plan, flat(true_idx), flat(salt))
         valid = jnp.ones((T * K,), bool)
         y_flat, slot_counts, dropped = _dispatch_round(
             x, gslot, valid, num_slots=n_slots, ranks=ep_ranks, cap=cap,
             axis_name=axis_name, slot_w=slot_w, activation=activation,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, impl=impl)
     else:
         # --- Token-to-Expert predicted mode: round 1 on predictions -------
         pred = predicted_idx.astype(jnp.int32)
@@ -202,7 +273,7 @@ def ep_moe_ffn(
         y1, slot_counts, dropped1 = _dispatch_round(
             x, gslot1, valid1, num_slots=n_slots, ranks=ep_ranks, cap=cap,
             axis_name=axis_name, slot_w=slot_w, activation=activation,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, impl=impl)
         # --- round 2: correction for mispredicted (token, k) pairs --------
         correct = flat(pred) == flat(true_idx)
         cap2 = max(8, int(cap * correction_cap_frac))
@@ -210,7 +281,7 @@ def ep_moe_ffn(
         y2, slot_counts2, dropped2 = _dispatch_round(
             x, gslot2, ~correct, num_slots=n_slots, ranks=ep_ranks, cap=cap2,
             axis_name=axis_name, slot_w=slot_w, activation=activation,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, impl=impl)
         y_flat = jnp.where(correct[:, None], y1, y2)
         slot_counts = slot_counts + slot_counts2
         dropped = dropped1 + dropped2   # slight overcount: r1 drops of mispredicted pairs
@@ -275,14 +346,12 @@ def ep_moe_ffn_replicated(
     salt = (jnp.arange(T, dtype=jnp.int32)[:, None] + jnp.arange(K)[None, :])
     gslot = choose_replica(plan, flat(router_out.expert_idx), flat(salt))
     mine = (gslot // n_slots) == rank
-    lslot = jnp.where(mine, gslot % n_slots, n_slots)
-    pos = _positions_in_slot(lslot, n_slots + 1)
-    in_cap = (pos < cap) & mine
-    dest = jnp.where(in_cap, lslot * cap + pos, n_slots * cap)
     token_of = jnp.arange(T * K, dtype=jnp.int32) // K
 
-    xs = jnp.zeros((n_slots * cap + 1, d), x.dtype).at[dest].set(
-        x[token_of], mode="drop")[:-1].reshape(n_slots, cap, d)
+    send, in_cap, dest, _, dropped = _PACKERS[moe.dispatch_impl](
+        x, token_of, gslot % n_slots, mine, num_classes=n_slots, cap=cap,
+        use_kernel=use_kernel)
+    xs = send.reshape(n_slots, cap, d)
     if use_kernel:
         from repro.kernels import ops as kernel_ops
         ys = kernel_ops.moe_gemm(xs, slot_w, activation)
@@ -304,7 +373,7 @@ def ep_moe_ffn_replicated(
     stats = MoEStats(
         expert_counts=counts,                       # already global (replicated)
         slot_counts=jax.lax.psum(slot_counts, axis_name),
-        dropped=jax.lax.psum((mine & ~in_cap).sum(), axis_name),
+        dropped=jax.lax.psum(dropped, axis_name),
         aux_loss=router_out.aux_loss,
         z_loss=router_out.z_loss,
     )

@@ -1,0 +1,165 @@
+"""Per-phase dispatch timing: route / pack / all_to_all / ffn / combine.
+
+The paper's guideline (Sec 4) picks a prediction strategy from *measured*
+hot-path costs, so the repo needs a way to attribute dispatch wall time to
+its phases. Inside one jitted shard_map the phases can't be separated on
+the host, so this module times each phase as its OWN jitted function on
+representative shapes:
+
+  route    router matmul + softmax + top-k + histogram
+  pack     send-buffer construction (the ``dispatch_impl`` hot path)
+  a2a      send->recv layout transform (the local cost of the all_to_all;
+           the wire time is modeled by ``repro.core.simulator``)
+  ffn      grouped expert FFN on the received block
+  combine  per-assignment gather + gate-weighted reduction
+
+Used by ``benchmarks/bench_dispatch`` (impl comparison) and
+``ContinuousEngine.profile_phases`` (serve-side breakdown fed into
+``ServeMetrics``).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.moe import dispatch as dsp
+from repro.moe.router import route
+
+PHASES = ("route", "pack", "a2a", "ffn", "combine")
+
+
+def _time(fn, *args, iters: int) -> float:
+    jax.block_until_ready(fn(*args))                 # compile + warm
+    best = math.inf
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def dispatch_phase_times(*, d_model: int = 256, d_ff: int = 256,
+                         num_experts: int = 64, top_k: int = 2,
+                         tokens: int = 2048, ranks: int = 4,
+                         capacity_factor: float = 1.25,
+                         impl: str = "sort", activation: str = "swiglu",
+                         use_kernel: bool = False, iters: int = 5,
+                         seed: int = 0) -> Dict[str, float]:
+    """Time each dispatch phase on a single device. Returns seconds per
+    phase plus ``"total"``; ``impl`` selects the pack formulation.
+
+    Experts map to slots identity-style (no duplication), so the phase
+    shapes match an EP deployment with ``ranks`` ranks hosting
+    ``num_experts / ranks`` home experts each; the all_to_all phase times
+    the (ranks, n_slots, cap) layout transform that brackets the wire.
+    """
+    if num_experts % ranks:
+        ranks = 1
+    rng = np.random.default_rng(seed)
+    T, K, E, d = tokens, top_k, num_experts, d_model
+    N = T * K
+    S = E                                  # identity plan: slot == expert
+    n_slots = S // ranks
+    cap = dsp.capacity(T, K, S, capacity_factor)
+    moe = MoEConfig(num_experts=E, top_k=K, d_ff_expert=d_ff,
+                    capacity_factor=capacity_factor, dispatch_impl=impl)
+
+    x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    router_params = {"w": jnp.asarray(rng.normal(size=(d, E)) * 0.02,
+                                      jnp.float32)}
+    token_of = jnp.arange(N, dtype=jnp.int32) // K
+    pack = dsp._PACKERS[impl]
+
+    # ----------------------------------------------------------- route
+    route_fn = jax.jit(lambda p, t: route(
+        p, moe, t, impl="fused" if use_kernel else "dense"))
+    out = jax.block_until_ready(route_fn(router_params, x))
+    gslot = out.expert_idx.reshape(-1)              # identity slot mapping
+    gates = out.gates
+    valid = jnp.ones((N,), bool)
+
+    # ------------------------------------------------------------ pack
+    pack_fn = jax.jit(lambda x_, g_: pack(
+        x_, token_of, g_, valid, num_classes=S, cap=cap,
+        use_kernel=use_kernel))
+    send, in_cap, dest, _, _ = jax.block_until_ready(pack_fn(x, gslot))
+
+    # ------------------------------------------------------------- a2a
+    def a2a_fn(s):
+        # send (S*cap, d) -> per-rank (ranks, n_slots*cap, d) -> received
+        # (n_slots, ranks*cap, d): the two reshuffles around the wire
+        r = s.reshape(ranks, n_slots, cap, d)
+        return r.transpose(1, 0, 2, 3).reshape(n_slots, ranks * cap, d)
+    a2a_jit = jax.jit(a2a_fn)
+    recv = send.reshape(S, cap, d)                  # full-slot view for ffn
+
+    # ------------------------------------------------------------- ffn
+    slot_w = {
+        "w_gate": jnp.asarray(rng.normal(size=(S, d, d_ff)) * 0.02, jnp.float32),
+        "w_up": jnp.asarray(rng.normal(size=(S, d, d_ff)) * 0.02, jnp.float32),
+        "w_down": jnp.asarray(rng.normal(size=(S, d_ff, d)) * 0.02, jnp.float32),
+    }
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        ffn_fn = jax.jit(lambda r: kernel_ops.moe_gemm(r, slot_w, activation))
+    else:
+        ffn_fn = jax.jit(lambda r: dsp.grouped_ffn(slot_w, r, activation))
+    ys = jax.block_until_ready(ffn_fn(recv)).reshape(S * cap, d)
+
+    # --------------------------------------------------------- combine
+    def combine_fn(y_recv, g):
+        y_flat = jnp.where(in_cap[:, None],
+                           y_recv[jnp.minimum(dest, S * cap - 1)], 0.0)
+        return (y_flat.reshape(T, K, d) * g[..., None]).sum(axis=1)
+    combine_jit = jax.jit(combine_fn)
+    jax.block_until_ready(combine_jit(ys, gates))
+
+    times = {
+        "route": _time(route_fn, router_params, x, iters=iters),
+        "pack": _time(pack_fn, x, gslot, iters=iters),
+        "a2a": _time(a2a_jit, send, iters=iters),
+        "ffn": _time(ffn_fn, recv, iters=iters),
+        "combine": _time(combine_jit, ys, gates, iters=iters),
+    }
+    times["total"] = sum(times[p] for p in PHASES)
+    return times
+
+
+def pack_impl_times(*, d_model: int = 256, num_experts: int = 64,
+                    top_k: int = 2, tokens: int = 4096,
+                    capacity_factor: float = 1.25, iters: int = 10,
+                    seed: int = 0) -> Dict[str, float]:
+    """Head-to-head pack-phase timing: both ``dispatch_impl`` formulations
+    on identical inputs, measured INTERLEAVED round by round so machine
+    drift (CPU contention, allocator state) hits both equally. Returns
+    {"sort": s, "onehot": s} best-of-``iters``."""
+    rng = np.random.default_rng(seed)
+    T, K, E, d = tokens, top_k, num_experts, d_model
+    N = T * K
+    S = E
+    cap = dsp.capacity(T, K, S, capacity_factor)
+    x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    token_of = jnp.arange(N, dtype=jnp.int32) // K
+    gslot = jnp.asarray(rng.integers(0, S, N), jnp.int32)
+    valid = jnp.ones((N,), bool)
+
+    fns = {}
+    for impl, pack in dsp._PACKERS.items():
+        fn = jax.jit(lambda x_, g_, p=pack: p(
+            x_, token_of, g_, valid, num_classes=S, cap=cap))
+        jax.block_until_ready(fn(x, gslot))          # compile + warm
+        fns[impl] = fn
+    best = {impl: math.inf for impl in fns}
+    for _ in range(max(iters, 1)):
+        for impl, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x, gslot))
+            best[impl] = min(best[impl], time.perf_counter() - t0)
+    return best

@@ -23,16 +23,31 @@ def init_router(key, d_model: int, moe: MoEConfig):
     return {"w": truncated_normal_init(key, (d_model, moe.num_experts), 0.02)}
 
 
-def route(params, moe: MoEConfig, x) -> RouterOutput:
-    """x: (T, d) token-major. Returns top-k assignment + losses."""
+def route(params, moe: MoEConfig, x, impl: str = "dense") -> RouterOutput:
+    """x: (T, d) token-major. Returns top-k assignment + losses.
+
+    ``impl="fused"`` runs the Pallas fused softmax/top-k/histogram kernel
+    (`repro.kernels.topk_router`) — one VMEM pass instead of three ops —
+    and derives the aux losses from the kernel's histogram and logsumexp
+    outputs. Assignments are bit-compatible with the dense path.
+    """
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
                         params["w"].astype(jnp.float32))
+    E = moe.num_experts
+    if impl == "fused":
+        from repro.kernels import ops as kernel_ops
+        expert_idx, gates, probs, lse, counts = kernel_ops.fused_topk_route(
+            logits, moe.top_k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        f = counts.astype(jnp.float32) / expert_idx.size
+        aux = E * jnp.sum(f * probs.mean(axis=0)) * moe.router_aux_loss
+        z = jnp.mean(jnp.square(lse)) * moe.router_z_loss
+        return RouterOutput(expert_idx, gates, probs, aux, z)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, expert_idx = jax.lax.top_k(probs, moe.top_k)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
 
     # Switch-style load-balance loss: E * sum_e f_e * p_e
-    E = moe.num_experts
     f = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
         1.0 / (expert_idx.size))
     p_mean = probs.mean(axis=0)

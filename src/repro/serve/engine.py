@@ -432,6 +432,30 @@ class ContinuousEngine:
                 out[name] = -1
         return out
 
+    def profile_phases(self, iters: int = 3, impl: Optional[str] = None
+                       ) -> Dict[str, float]:
+        """Measure the dispatch phase breakdown (route/pack/a2a/ffn/combine)
+        at this deployment's prefill shape. The breakdown is recorded into
+        ``metrics`` only when it profiles the ACTIVE ``dispatch_impl`` —
+        what-if runs with an ``impl`` override just return their numbers,
+        so repeated calls can't corrupt the reported phase columns.
+        Returns seconds per phase."""
+        if not self.cfg.is_moe:
+            return {}
+        from repro.moe.profile import dispatch_phase_times
+        m = self.moe_cfg
+        phases = dispatch_phase_times(
+            d_model=self.cfg.d_model, d_ff=m.d_ff_expert,
+            num_experts=m.num_experts, top_k=m.top_k,
+            tokens=self.ccfg.prefill_len, ranks=self.ep_ranks,
+            capacity_factor=m.capacity_factor,
+            impl=impl or m.dispatch_impl, activation=self.cfg.activation,
+            iters=iters)
+        if (impl is None or impl == m.dispatch_impl) \
+                and not self.metrics.phase_times:
+            self.metrics.record_phases(phases)
+        return phases
+
     def assert_no_recompiles(self):
         assert self._warm, "call warmup() first"
         now = self.compile_counts()

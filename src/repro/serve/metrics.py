@@ -128,6 +128,7 @@ class ServeMetrics:
         self.slo_tpot = slo_tpot
         self.timings: List[RequestTiming] = []
         self.windows: List[WindowRecord] = []
+        self.phase_times: Dict[str, float] = {}   # dispatch phase breakdown
         self._win_counts: Optional[np.ndarray] = None
         self._win: Optional[WindowRecord] = None
         self._t0: Optional[float] = None
@@ -174,6 +175,16 @@ class ServeMetrics:
     def flush(self, plan=None, ep_ranks: int = 1, dup_slots: int = 0):
         self._close_window(plan, ep_ranks, dup_slots)
 
+    # ------------------------------------------------------- phase timings
+    def record_phases(self, phases: Dict[str, float]):
+        """Attach a measured dispatch phase breakdown (seconds per phase:
+        route/pack/a2a/ffn/combine/total, from
+        ``repro.moe.profile.dispatch_phase_times``). Repeated calls
+        accumulate, so callers can record prefill- and decode-shaped
+        profiles separately."""
+        for k, v in phases.items():
+            self.phase_times[k] = self.phase_times.get(k, 0.0) + float(v)
+
     # ---------------------------------------------------------- per-request
     def record_completion(self, t: RequestTiming):
         self.timings.append(t)
@@ -191,7 +202,10 @@ class ServeMetrics:
         good = [t for t in ts
                 if t.ttft <= self.slo_ttft and t.tpot <= self.slo_tpot]
         total_tokens = sum(t.new_tokens for t in ts)
+        phase_cols = {f"phase_{k}_us": v * 1e6
+                      for k, v in self.phase_times.items()}
         return {
+            **phase_cols,
             "completed": float(len(ts)),
             "ttft_p50": _pct(ttfts, 50), "ttft_p99": _pct(ttfts, 99),
             "tpot_mean": float(np.mean(tpots)) if tpots else 0.0,
