@@ -1,0 +1,169 @@
+"""Replica runtime benchmark: persistent store vs per-step pool gather.
+
+Two quantities per (ep_ranks, dup_slots) point, measured on a real EP
+mesh (8 fake host devices, spawned in a subprocess so the main process
+keeps its single-device view):
+
+* steady-state prefill step time with a FIXED duplicated plan — the
+  ``replica_impl="gather"`` path pays the pool all_gather every step of
+  every MoE layer, the ``"store"`` path reads resident slot weights;
+  ``store_speedup = gather / store`` is the key derived quantity (the
+  per-step overhead the paper's Sec 5 transfer model says should not
+  exist at all).
+* plan-switch stall — wall time of a full chunked migration between two
+  different duplication plans, plus the bytes it moves (the one-off cost
+  the store pays INSTEAD of the per-step collective).
+
+Writes ``BENCH_migration.json``; the CI gate fails when the store path is
+slower than the gather path it replaces (``check_regression``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+_SUB = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json, math, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.registry import get_config
+from repro.core.duplication import duplicate_experts_host
+from repro.core.placement import stack_plans
+from repro.data.synthetic import skewed_distribution
+from repro.models.transformer import Runtime, forward, init_cache, init_model
+from repro.runtime import (MigrationExecutor, ReplicaStore, migration_stall_s,
+                           make_migrate_step, plan_diff)
+from repro.train.steps import make_prefill_step
+
+COMBOS = {combos}
+ITERS = {iters}
+B, S = 2, 64
+
+def bench_point(ranks, dup):
+    base = get_config("mixtral-8x7b").reduced()
+    # heavy expert weights vs light token work: the regime where the
+    # per-step pool gather dominates (weight bytes >> activation bytes)
+    cfg = dataclasses.replace(base, num_layers=2, moe=dataclasses.replace(
+        base.moe, d_ff_expert=2048, duplication_slots=dup))
+    E = cfg.moe.num_experts
+    mesh = jax.make_mesh((8 // ranks, ranks), ("data", "model"))
+    rt = Runtime(mesh=mesh, ep=True, ep_ranks=ranks, use_duplication=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    experts = params["layers"]["moe"]["experts"]
+    batch = {{"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                           cfg.vocab_size)}}
+    plan_a = stack_plans([duplicate_experts_host(
+        skewed_distribution(E, 3.0 + l), ranks, dup, 4).plan
+        for l in range(cfg.num_layers)])
+    plan_b = stack_plans([duplicate_experts_host(
+        skewed_distribution(E, 6.0 - l), ranks, dup, 4).plan
+        for l in range(cfg.num_layers)])
+    store = ReplicaStore.from_params(experts, plan_a, num_experts=E,
+                                     ep_ranks=ranks, dup_slots=dup, mesh=mesh)
+    cache = init_cache(cfg, rt, B, S)
+    step = jax.jit(make_prefill_step(cfg, rt))
+
+    def timed_pair(fa, fb):
+        # best-of-ITERS, INTERLEAVED round by round so machine drift
+        # (CPU contention, allocator state) hits both paths equally
+        jax.block_until_ready(fa())               # compile + warm
+        jax.block_until_ready(fb())
+        best_a = best_b = math.inf
+        for _ in range(ITERS):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fa())
+            best_a = min(best_a, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fb())
+            best_b = min(best_b, time.perf_counter() - t0)
+        return best_a, best_b
+
+    with mesh:
+        t_gather, t_store = timed_pair(
+            lambda: step(params, batch, cache, plan_a),
+            lambda: step(params, batch, cache, plan_a, None, store.weights))
+        # plan switch: chunked migration A -> B (wall time of the fill)
+        mig = make_migrate_step(mesh, num_experts=E, ep_ranks=ranks,
+                                dup_slots=dup)
+        diff = plan_diff(plan_a, plan_b, ranks, dup)
+        t_switch, moved = 0.0, 0
+        if diff.num_entries:
+            ex = MigrationExecutor(mig, experts, store.entry_bytes, chunk=4)
+            ex.begin(store.weights, diff, plan_b)
+            ex._run_chunk()                       # compile the chunk step
+            jax.block_until_ready(ex._back)
+            ex.begin(store.weights, diff, plan_b)
+            t0 = time.perf_counter()
+            (weights, _, _), moved = ex.tick()
+            jax.block_until_ready(weights)
+            t_switch = time.perf_counter() - t0
+    return dict(ranks=ranks, dup_slots=dup,
+                gather_step_us=t_gather * 1e6, store_step_us=t_store * 1e6,
+                store_speedup=t_gather / max(t_store, 1e-12),
+                switch_entries=diff.num_entries, switch_bytes=int(moved),
+                switch_wall_us=t_switch * 1e6)
+
+print(json.dumps([bench_point(r, d) for r, d in COMBOS]))
+"""
+
+
+def run(verbose: bool = True, smoke: bool = None):
+    import repro
+
+    if smoke is None:
+        smoke = _smoke()
+    combos = [(4, 1), (4, 2)] if smoke else [(4, 1), (4, 2), (8, 1), (8, 2)]
+    iters = 5 if smoke else 10
+    # repro is a namespace package (no __init__.py): locate src via __path__
+    src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    prog = textwrap.dedent(_SUB).format(combos=combos, iters=iters)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=1800,
+                         env=dict(os.environ, PYTHONPATH=src_root))
+    if out.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{out.stderr[-2000:]}")
+    rows = json.loads(out.stdout.strip().splitlines()[-1])
+
+    doc = {"schema": 1, "smoke": smoke, "rows": rows}
+    out_dir = os.environ.get("REPRO_BENCH_OUT", ".")
+    path = os.path.join(out_dir, "BENCH_migration.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+
+    if verbose:
+        print(f"{'ranks':>5s} {'dup':>4s} {'gather':>10s} {'store':>10s} "
+              f"{'speedup':>8s} {'switch':>10s} {'moved':>10s}")
+        for r in rows:
+            print(f"{r['ranks']:5d} {r['dup_slots']:4d} "
+                  f"{r['gather_step_us']:9.0f}us {r['store_step_us']:9.0f}us "
+                  f"{r['store_speedup']:7.2f}x {r['switch_wall_us']:9.0f}us "
+                  f"{r['switch_bytes'] / 1e6:8.1f}MB")
+        print(f"wrote {path}")
+
+    head = rows[0]
+    summary = {
+        "store_speedup": head["store_speedup"],
+        "gather_step_us": head["gather_step_us"],
+        "store_step_us": head["store_step_us"],
+        "switch_wall_us": head["switch_wall_us"],
+        "switch_bytes": float(head["switch_bytes"]),
+        "min_store_speedup": min(r["store_speedup"] for r in rows),
+    }
+    derived = (f"store_speedup={head['store_speedup']:.2f}x "
+               f"switch_stall={head['switch_wall_us']:.0f}us "
+               f"moved={head['switch_bytes'] / 1e6:.1f}MB")
+    return summary, derived
+
+
+if __name__ == "__main__":
+    run(verbose=True)

@@ -101,6 +101,11 @@ def run(verbose: bool = True, smoke: bool = None):
         print("\ncontroller switches:")
         for line in controller.switch_log():
             print("  " + line)
+        print(f"\nreplica migration: replans={int(s['migration_replans'])} "
+              f"planned={s['migration_planned_bytes'] / 1e6:.2f}MB "
+              f"moved={s['migration_bytes_moved'] / 1e6:.2f}MB "
+              f"stall={s['migration_stall_us']:.0f}us "
+              f"rejected={int(s['migration_rejected'])}")
         if phases:
             print("\ndispatch phase breakdown (prefill shape, "
                   f"impl={eng.moe_cfg.dispatch_impl}):")
@@ -108,6 +113,9 @@ def run(verbose: bool = True, smoke: bool = None):
             for k in ("route", "pack", "a2a", "ffn", "combine"):
                 print(f"  {k:8s} {phases[k]*1e6:9.0f}us "
                       f"({100.0 * phases[k] / total:4.1f}%)")
+            if "migrate" in phases:
+                print(f"  {'migrate':8s} {phases['migrate']*1e6:9.0f}us "
+                      "(per plan-switch chunk, not per step)")
 
     assert n_completed == len(trace), (n_completed, len(trace))
     if not smoke:

@@ -8,9 +8,11 @@ Compares a fresh ``benchmarks/run.py --smoke --json`` document against the
 committed baseline and FAILS (exit 1) when:
 
   * total smoke wall time regressed by more than ``--tol`` (default 25%),
-  * any bench that passed in the baseline now fails, or
+  * any bench that passed in the baseline now fails,
   * the dispatch bench's measured pack speedup fell below 1.0 (the sort
-    hot path must never be slower than the one-hot oracle it replaced).
+    hot path must never be slower than the one-hot oracle it replaced), or
+  * the migration bench's store speedup fell below 1.0 (persistent replica
+    buffers must never be slower than the per-step pool gather).
 
 Escape hatch: set ``REPRO_BENCH_REFRESH_BASELINE=1`` to overwrite the
 baseline with the current measurement instead of gating (use when a
@@ -49,6 +51,13 @@ def compare(current: dict, baseline: dict, tol: float) -> list:
         failures.append(
             f"sort dispatch slower than the one-hot oracle: "
             f"pack_speedup={speedup:.2f}x")
+    mig = (current.get("benches", {})
+           .get("migration_store_vs_gather", {}).get("summary") or {})
+    store_speedup = mig.get("min_store_speedup", mig.get("store_speedup"))
+    if store_speedup is not None and store_speedup < 1.0:
+        failures.append(
+            f"replica store slower than the per-step gather it replaces: "
+            f"store_speedup={store_speedup:.2f}x")
     return failures
 
 

@@ -61,8 +61,9 @@ def main(argv=None) -> int:
     # import AFTER the env flag so modules can read it at import time too
     from benchmarks import (bench_appendix_c, bench_dispatch,
                             bench_dup_overhead, bench_fig4, bench_fig6,
-                            bench_fig7, bench_runtime_balance,
-                            bench_serve_traces, bench_table1)
+                            bench_fig7, bench_migration,
+                            bench_runtime_balance, bench_serve_traces,
+                            bench_table1)
     benches = {
         "table1_skew_vs_error": bench_table1.run,
         "fig4_accuracy_overhead_perf": bench_fig4.run,
@@ -73,6 +74,7 @@ def main(argv=None) -> int:
         "appendix_c_generality": bench_appendix_c.run,
         "serve_traces_continuous": bench_serve_traces.run,
         "dispatch_phase_breakdown": bench_dispatch.run,
+        "migration_store_vs_gather": bench_migration.run,
     }
 
     names = argv or list(benches)

@@ -34,6 +34,12 @@ class MoEConfig:
     # "onehot": (N, S) one-hot cumsum + scatter (reference oracle).
     # Both produce bit-identical send buffers, stats and drop decisions.
     dispatch_impl: str = "sort"
+    # Replica weight movement -----------------------------------------------
+    # "store": engines keep persistent per-rank slot-weight buffers
+    # (repro.runtime.ReplicaStore) and move weights only when the plan
+    # changes; "gather": per-step all_gather replica pool (bit-exact
+    # oracle, and the fallback whenever no store is threaded in).
+    replica_impl: str = "store"
 
 
 @dataclass(frozen=True)

@@ -184,26 +184,44 @@ def run_gps(
     t2e_curve: Optional[Sequence[T2EPoint]] = None,
     scenario: str = "typical",
     comm_model: str = "paper",
+    migration_stall_s: float = 0.0,
 ) -> GPSReport:
-    """Evaluate all strategies for one (model, hardware, skew) point."""
+    """Evaluate all strategies for one (model, hardware, skew) point.
+
+    ``migration_stall_s``: per-layer-per-step replica-weight migration
+    stall (the plan-churn cost of the persistent-store runtime,
+    ``repro.runtime.cost.amortized_layer_stall_s``). Charged as overhead
+    to every DUPLICATING strategy, so a strategy whose predicted balance
+    gain is smaller than its weight movement loses to the baseline.
+    """
     if cfg.moe is None:
         raise ValueError(f"{cfg.name} has no MoE FFN: the paper's technique "
                          "is inapplicable (see DESIGN.md Arch-applicability)")
+    import dataclasses as _dc
     dist_eps = dist_eps or default_dist_eps
     curve = list(t2e_curve) if t2e_curve is not None else default_t2e_curve(skew)
     lat = lambda **kw: layer_latency(cfg, hw, batch=batch, seq=seq, skew=skew,
                                      scenario=scenario, comm_model=comm_model,
                                      **kw)
 
+    def charge_migration(r: StrategyResult) -> StrategyResult:
+        if migration_stall_s <= 0.0:
+            return r
+        lb = _dc.replace(r.latency,
+                         overhead=r.latency.overhead + migration_stall_s)
+        return _dc.replace(r, latency=lb)
+
     baseline = StrategyResult("none", 0.0, lat(strategy="none"))
     eps_d = dist_eps(skew)
-    dist_only = StrategyResult("dist_only", 1.0 - eps_d,
-                               lat(strategy="dist_only", eps=eps_d))
+    dist_only = charge_migration(
+        StrategyResult("dist_only", 1.0 - eps_d,
+                       lat(strategy="dist_only", eps=eps_d)))
     t2e_points = [
-        StrategyResult("token_to_expert", p.accuracy,
-                       lat(strategy="token_to_expert", eps=1.0 - p.accuracy,
-                           overhead_frac=p.overhead_frac),
-                       predictor=p.name)
+        charge_migration(StrategyResult(
+            "token_to_expert", p.accuracy,
+            lat(strategy="token_to_expert", eps=1.0 - p.accuracy,
+                overhead_frac=p.overhead_frac),
+            predictor=p.name))
         for p in curve
     ]
     return GPSReport(model=cfg.name, hardware=hw.name, skew=skew,
@@ -244,6 +262,9 @@ def recommend_strategy(
     the engine (the controller must not pick an unrunnable strategy).
     ``min_saving`` — below this predicted end-to-end saving, duplication
     is not worth its plan churn: run plain EP ("none").
+    ``migration_stall_s`` (kw) — measured replica-migration stall per
+    layer-step; duplicating strategies carry it, so heavy plan churn
+    tips the verdict toward "none" (see ``run_gps``).
     """
     report = run_gps(cfg, hw, batch=batch, seq=seq,
                      skew=max(float(skew), 1.0), **kw)

@@ -72,6 +72,29 @@ def stack_plans(plans) -> PlacementPlan:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
 
 
+def slot_expert_map(plan: PlacementPlan, ep_ranks: int,
+                    dup_slots: int) -> np.ndarray:
+    """(S,) expert id occupying each global slot; -1 = unused replica slot.
+
+    Home slots are fixed by construction; replica slots are read off the
+    plan's ``replica_table`` rows (entries ``1..n_replicas-1`` are live
+    extra copies). This is the host-side view the replica-weight runtime
+    diffs between plans — a slot's *contents* only matter while some
+    expert's replica set points at it.
+    """
+    E = int(np.asarray(plan.n_replicas).shape[-1])
+    e_loc, n_slots = plan_dims(E, ep_ranks, dup_slots)
+    se = -np.ones((ep_ranks * n_slots,), np.int64)
+    e = np.arange(E)
+    se[home_slot(e, e_loc, n_slots)] = e
+    n_rep = np.asarray(plan.n_replicas)
+    table = np.asarray(plan.replica_table)
+    for ei in range(E):
+        for c in range(1, int(n_rep[ei])):
+            se[int(table[ei, c])] = ei
+    return se
+
+
 def plan_from_assignments(assignments, num_experts: int, ep_ranks: int,
                           dup_slots: int, max_copies: int) -> PlacementPlan:
     """Build a PlacementPlan from a host-side list of extra copies.

@@ -231,7 +231,8 @@ def init_cache(cfg: ModelConfig, rt: Runtime, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
-               predicted_l, decode: bool, token_weight=None):
+               predicted_l, decode: bool, token_weight=None,
+               slot_w_l=None):
     """x: (B, S, d). Returns (y, expert_counts (E,), slot_counts, aux, z,
     dropped).
 
@@ -240,6 +241,11 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
     mask so estimator inputs only count REAL tokens (padded prefill
     positions and idle decode slots still flow through the FFN but must
     not skew the observed distribution).
+
+    ``slot_w_l``: optional {name: (S_global, ...)} resident slot weights
+    for this layer (one ``repro.runtime.ReplicaStore`` layer slice) —
+    sharded over the EP axis so dispatch reads replica weights from
+    device memory instead of re-gathering a pool every step.
     """
     moe = cfg.moe
     B, S, d = x.shape
@@ -278,6 +284,8 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
         n_tp *= mesh.shape[a]
     tp_mode = (decode and rt.decode_expert_tp and bool(tp_axes)
                and moe.d_ff_expert % n_tp == 0)
+    if tp_mode:
+        slot_w_l = None       # 2D expert sharding keeps the gather path
     expert_specs = P("model", None, None)
     if decode:
         if tp_mode:
@@ -299,7 +307,7 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
     router_impl = ("fused" if rt.use_kernel and moe.dispatch_impl == "sort"
                    else "dense")
 
-    def inner(x_blk, router_w, experts_w, plan, pred, w_blk):
+    def inner(x_blk, router_w, experts_w, plan, pred, w_blk, slot_blk):
         t = x_blk.reshape(-1, x_blk.shape[-1])
         router_out = route(router_w, moe, t, impl=router_impl)
         y, stats = dispatch_fn(
@@ -308,7 +316,8 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
             activation=cfg.activation,
             use_duplication=rt.use_duplication,
             predicted_idx=pred.reshape(-1, moe.top_k) if pred is not None else None,
-            use_kernel=rt.use_kernel)
+            use_kernel=rt.use_kernel,
+            slot_weights=slot_blk)
         counts, slots = stats.expert_counts, stats.slot_counts
         aux, z, dropped = stats.aux_loss, stats.z_loss, stats.dropped
         if w_blk is not None:
@@ -334,13 +343,15 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
     plan_specs = PlacementPlan(P(), P(), P(), P())
     pred_spec = None if predicted_l is None else x_spec
     w_spec = None if token_weight is None else P(*x_spec[:-1])
+    slot_spec = None if slot_w_l is None else P("model", None, None)
     y, counts, slot_counts, aux, z, dropped = shard_map(
         inner, mesh=mesh,
-        in_specs=(x_spec, P(), expert_specs, plan_specs, pred_spec, w_spec),
+        in_specs=(x_spec, P(), expert_specs, plan_specs, pred_spec, w_spec,
+                  slot_spec),
         out_specs=(x_spec, P(), P(), P(), P(), P()),
         check_vma=False,
     )(x, layer_p["moe"]["router"], layer_p["moe"]["experts"], plan_l,
-      predicted_l, token_weight)
+      predicted_l, token_weight, slot_w_l)
 
     if "shared" in layer_p["moe"]:
         y = y + ffn(layer_p["moe"]["shared"], x, cfg.activation)
@@ -362,7 +373,7 @@ def _zero_stats(cfg):
 
 def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
                 mode="train", enc_out=None, plan_l=None, predicted_l=None,
-                block_tables=None, token_weight=None):
+                block_tables=None, token_weight=None, slot_w_l=None):
     """Generic attention+FFN layer for dense/moe/vlm/audio-decoder."""
     window = rt.window(cfg)
     h = apply_norm(cfg.norm, layer_p["ln1"], x)
@@ -425,7 +436,8 @@ def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
     if cfg.is_moe:
         y, counts, slots, aux, z, dropped = _moe_apply(
             layer_p, cfg, h, rt, plan_l, predicted_l,
-            decode=(mode == "decode"), token_weight=token_weight)
+            decode=(mode == "decode"), token_weight=token_weight,
+            slot_w_l=slot_w_l)
         stats = (counts, slots, aux, z, dropped)
     else:
         y = ffn(layer_p["ffn"], h, cfg.activation)
@@ -532,7 +544,8 @@ def _logits(params, cfg: ModelConfig, x):
 
 def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
             cache=None, cache_len=None, plan=None, predicted_idx=None,
-            block_tables=None, last_pos=None, token_weight=None):
+            block_tables=None, last_pos=None, token_weight=None,
+            slot_weights=None):
     """Unified entry. Returns (logits, new_cache, stats_dict).
 
     mode=train:   logits (B, S, V) over the full sequence.
@@ -553,6 +566,12 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
                           of at the padded end.
       ``token_weight``  — (B, S) weight for MoE expert histograms (0 for
                           padding / idle slots).
+      ``slot_weights``  — stacked {name: (L, S_global, ...)} resident
+                          replica slot weights (``ReplicaStore.weights``);
+                          when given, EP dispatch reads replica weights
+                          from device memory instead of all_gathering a
+                          pool every step. Traced, so migration commits
+                          (new contents, same shapes) never recompile.
     """
     enc_out = None
     if cfg.is_encdec and mode != "decode":
@@ -616,18 +635,20 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
         seq_shard = cfg.is_moe and mode != "decode"
 
         def body(h, xs):
-            layer_p, cache_l, plan_l, pred_l = xs
+            layer_p, cache_l, plan_l, pred_l, slot_l = xs
             h = constrain_acts(h, rt, seq_shard)
             h, new_c, st = _attn_layer(
                 layer_p, cfg, h, positions, rt, cache=cache_l,
                 cache_len=cache_len, mode=mode, enc_out=enc_out,
                 plan_l=plan_l, predicted_l=pred_l,
-                block_tables=block_tables, token_weight=token_weight)
+                block_tables=block_tables, token_weight=token_weight,
+                slot_w_l=slot_l)
             return constrain_acts(h, rt, seq_shard), (new_c, st)
 
         xs = (params["layers"], cache,
               plan if plan is not None else _none_stack(L),
-              pred if pred is not None else _none_stack(L))
+              pred if pred is not None else _none_stack(L),
+              slot_weights if slot_weights is not None else _none_stack(L))
         x, (new_cache, layer_stats) = jax.lax.scan(body, x, xs)
         if cfg.is_moe:
             counts, slots, aux, z, dropped = layer_stats

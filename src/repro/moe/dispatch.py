@@ -5,10 +5,14 @@ Every rank hosts ``E_loc = E/R`` home experts plus ``D`` replica slots.
 
 Pipeline per rank (T = local tokens, S = R * n_slots global slots):
 
-  1. (optional) fill the replica pool: each source rank contributes ONE
-     expert's weights; ``all_gather`` makes the pool of R candidates
-     available everywhere (paper Sec 5 transfer model — this collective is
-     the duplication overhead and is visible in the roofline).
+  1. (optional) resolve slot weights. With a resident
+     ``repro.runtime.ReplicaStore`` shard threaded in (``slot_weights``),
+     replica weights are already placed — no collective. Otherwise fill
+     the replica pool per step: each source rank contributes ONE expert's
+     weights; ``all_gather`` makes the pool of R candidates available
+     everywhere (paper Sec 5 transfer model — that collective is the
+     per-step duplication overhead the store amortizes away), skipped
+     under an identity plan.
   2. route tokens (true router or an external predicted assignment).
   3. pick a replica per (token, k): round-robin over ``n_replicas[e]``.
   4. capacity-dispatch: pack tokens into a (S * C, d) send buffer —
@@ -169,6 +173,34 @@ def _slot_weights(expert_weights: dict, pool: Optional[dict],
     return out
 
 
+def _resolve_slot_weights(expert_weights: dict, slot_weights: Optional[dict],
+                          plan: PlacementPlan, dup_slots: int, ranks: int,
+                          axis_name: str) -> dict:
+    """Per-rank (n_slots, ...) slot weights for this step.
+
+    ``slot_weights`` (the persistent ``repro.runtime.ReplicaStore`` shard)
+    wins when threaded in: replica weights are already resident, NO
+    collective. Otherwise the per-step gather pool is built — skipped via
+    ``lax.cond`` when the plan is the identity stack (no expert has a
+    second replica), since replica-slot contents are unreachable then and
+    zeros serve as well as a gathered pool.
+    """
+    if slot_weights is not None:
+        return slot_weights
+    pool = None
+    if dup_slots > 0:
+        def gather():
+            return gather_replica_pool(expert_weights, plan, axis_name)
+
+        def empty():
+            return {k: jnp.zeros((ranks,) + w.shape[1:], w.dtype)
+                    for k, w in expert_weights.items()}
+
+        # plan arrays are replicated, so every rank takes the same branch
+        pool = jax.lax.cond(jnp.any(plan.n_replicas > 1), gather, empty)
+    return _slot_weights(expert_weights, pool, plan, dup_slots, axis_name)
+
+
 def grouped_ffn(slot_w: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
     """x: (n_slots, T_s, d) -> (n_slots, T_s, d). Pure-jnp grouped expert FFN
     (the Pallas `moe_gemm` kernel implements the same contraction)."""
@@ -237,6 +269,7 @@ def ep_moe_ffn(
     predicted_idx: Optional[jnp.ndarray] = None,   # (T, K) predicted experts
     correction_cap_frac: float = 0.25,
     use_kernel: bool = False,
+    slot_weights: Optional[dict] = None,  # resident per-rank (n_slots, ...) store
 ) -> Tuple[jnp.ndarray, MoEStats]:
     """Placement-aware EP MoE FFN (see module docstring). Returns (y, stats)."""
     T, d = x.shape
@@ -247,10 +280,8 @@ def ep_moe_ffn(
     S = ep_ranks * n_slots
     cap = capacity(T, K, S, moe.capacity_factor)
 
-    pool = None
-    if dup_slots > 0:
-        pool = gather_replica_pool(expert_weights, plan, axis_name)
-    slot_w = _slot_weights(expert_weights, pool, plan, dup_slots, axis_name)
+    slot_w = _resolve_slot_weights(expert_weights, slot_weights, plan,
+                                   dup_slots, ep_ranks, axis_name)
 
     true_idx = router_out.expert_idx                             # (T, K)
     gates = router_out.gates.astype(x.dtype)                     # (T, K)
@@ -313,6 +344,7 @@ def ep_moe_ffn_replicated(
     predicted_idx=None,
     use_kernel: bool = False,
     tp_axis: Tuple[str, ...] = (),
+    slot_weights: Optional[dict] = None,
 ) -> Tuple[jnp.ndarray, MoEStats]:
     """Decode-path EP dispatch: tokens are replicated over the model axis
     (decode batches are too small to shard over it). Each rank computes the
@@ -336,10 +368,8 @@ def ep_moe_ffn_replicated(
     S = ep_ranks * n_slots
     cap = capacity(T, K, n_slots, moe.capacity_factor)  # per-rank slot capacity
 
-    pool = None
-    if dup_slots > 0:
-        pool = gather_replica_pool(expert_weights, plan, axis_name)
-    slot_w = _slot_weights(expert_weights, pool, plan, dup_slots, axis_name)
+    slot_w = _resolve_slot_weights(expert_weights, slot_weights, plan,
+                                   dup_slots, ep_ranks, axis_name)
 
     rank = jax.lax.axis_index(axis_name)
     flat = lambda a: a.reshape(-1)

@@ -33,6 +33,9 @@ from repro.moe import dispatch as dsp
 from repro.moe.router import route
 
 PHASES = ("route", "pack", "a2a", "ffn", "combine")
+# Paid once per PLAN SWITCH, not per step — kept out of PHASES so per-step
+# totals and the dispatch impl comparison stay impl-independent.
+MIGRATE_PHASE = "migrate"
 
 
 def _time(fn, *args, iters: int) -> float:
@@ -130,6 +133,49 @@ def dispatch_phase_times(*, d_model: int = 256, d_ff: int = 256,
     }
     times["total"] = sum(times[p] for p in PHASES)
     return times
+
+
+def migrate_phase_time(*, d_model: int = 256, d_ff: int = 256,
+                       num_experts: int = 64, ranks: int = 4,
+                       dup_slots: int = 1, layers: int = 2, chunk: int = 8,
+                       iters: int = 5, seed: int = 0) -> Dict[str, float]:
+    """Device-side cost of ONE fixed-shape replica-migration chunk (gather
+    from the home expert stacks + masked scatter into the slot store) at
+    representative shapes. The wire term of a migration is modeled by
+    ``repro.runtime.cost`` — this times the local work that brackets it,
+    mirroring how the ``a2a`` phase times the layout transform around the
+    dispatch collective. Returns ``{"migrate": seconds}``."""
+    from repro.core.placement import identity_plan, stack_plans
+    from repro.runtime import ReplicaStore, make_migrate_step
+
+    if num_experts % ranks:
+        ranks = 1
+    rng = np.random.default_rng(seed)
+    E, L = num_experts, layers
+    experts = {
+        "w_gate": jnp.asarray(rng.normal(size=(L, E, d_model, d_ff)) * 0.02,
+                              jnp.float32),
+        "w_up": jnp.asarray(rng.normal(size=(L, E, d_model, d_ff)) * 0.02,
+                            jnp.float32),
+        "w_down": jnp.asarray(rng.normal(size=(L, E, d_ff, d_model)) * 0.02,
+                              jnp.float32),
+    }
+    plan = stack_plans([identity_plan(E, ranks, dup_slots, 4)
+                        for _ in range(L)])
+    store = ReplicaStore.from_params(experts, plan, num_experts=E,
+                                     ep_ranks=ranks, dup_slots=dup_slots)
+    step = make_migrate_step(None, num_experts=E, ep_ranks=ranks,
+                             dup_slots=dup_slots)
+    n_slots = E // ranks + dup_slots
+    layer = jnp.asarray(rng.integers(0, L, chunk), jnp.int32)
+    dst = jnp.asarray((rng.integers(0, ranks, chunk) * n_slots
+                       + E // ranks + rng.integers(0, dup_slots, chunk)),
+                      jnp.int32)
+    src = jnp.asarray(rng.integers(0, E, chunk), jnp.int32)
+    valid = jnp.ones((chunk,), bool)
+    t = _time(step, store.weights, experts, layer, dst, src, valid,
+              iters=iters)
+    return {MIGRATE_PHASE: t}
 
 
 def pack_impl_times(*, d_model: int = 256, num_experts: int = 64,

@@ -1,0 +1,35 @@
+"""Replica-weight migration runtime.
+
+The paper's transfer model (Sec 5) charges duplication ONE weight movement
+per re-plan; the per-step ``gather_replica_pool`` collective in
+``repro.moe.dispatch`` pays it every forward step of every MoE layer. This
+package makes replica weights *persistent* so the serving engines pay
+weight movement only when the plan actually changes:
+
+  ``ReplicaStore``      — per-rank ``(L, S, ...)`` slot-weight buffers
+                          (home experts + replica slots) kept in device
+                          memory across steps, versioned per layer.
+  ``plan_diff``         — exactly which (layer, slot) entries change
+                          expert assignment between two stacked plans.
+  ``MigrationExecutor`` — serve -> diff -> chunked fill -> swap: fills
+                          only changed slots with a fixed-shape collective
+                          step, chunked to a per-step budget and
+                          double-buffered so engines keep serving on the
+                          old plan until the swap commits (zero
+                          recompiles).
+  ``cost``              — bytes-moved / stall model fed into the GPS
+                          guideline and the online controller hysteresis.
+"""
+
+from repro.runtime.cost import (entry_bytes, migration_stall_s,
+                                plan_migration_bytes, should_migrate)
+from repro.runtime.diff import PlanDiff, apply_diff, plan_diff, stacked_slot_experts
+from repro.runtime.migrate import MigrationExecutor, make_migrate_step, migrate_all
+from repro.runtime.store import ReplicaStore
+
+__all__ = [
+    "MigrationExecutor", "PlanDiff", "ReplicaStore", "apply_diff",
+    "entry_bytes", "make_migrate_step", "migrate_all", "migration_stall_s",
+    "plan_diff", "plan_migration_bytes", "should_migrate",
+    "stacked_slot_experts",
+]

@@ -1,0 +1,61 @@
+"""Migration cost model: bytes moved per plan switch and the stall they
+cost on the deployment's interconnect (the roofline's collective term).
+
+Two consumers:
+
+* ``core.gps.run_gps`` — an amortized per-layer-per-step migration stall
+  is added to the *duplicating* strategies' overhead, so the guideline
+  rejects a strategy whose plan churn costs more than its balance gain.
+* the serving engines — ``should_migrate`` gates an individual re-plan:
+  serving stays on the old plan when the predicted stall exceeds the
+  predicted imbalance gain until the next re-plan.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def entry_bytes(weights: dict) -> int:
+    """Bytes one slot entry (one expert's weights) occupies, from the
+    actual stacked weight arrays {name: (L, E_or_S, ...)}."""
+    total = 0
+    for w in weights.values():
+        per = 1
+        for d in w.shape[2:]:
+            per *= int(d)
+        total += per * int(np.dtype(w.dtype).itemsize)
+    return total
+
+
+def plan_migration_bytes(diff, weights: dict) -> int:
+    """Logical bytes a diff moves: one send + receive per changed entry
+    (the paper's Sec 5 transfer accounting, per entry instead of per
+    rank)."""
+    return diff.bytes_moved(entry_bytes(weights))
+
+
+def migration_stall_s(nbytes: float, hw) -> float:
+    """Serialized wire time of a migration on ``hw``
+    (`repro.core.simulator.HardwareConfig`). The executor overlaps chunks
+    with serving steps, so this is the worst-case stall, matching the
+    roofline's collective term bytes / link_bw."""
+    return float(nbytes) / max(float(hw.link_bw), 1.0)
+
+
+def amortized_layer_stall_s(window_bytes: float, hw, *, num_layers: int,
+                            window_steps: int) -> float:
+    """Measured migration traffic of a serving window -> the per-layer
+    per-step stall `run_gps` should charge duplicating strategies.
+
+    ``window_bytes`` spans all layers and all steps of the window, while
+    ``layer_latency`` models one layer of one step — divide accordingly.
+    """
+    steps = max(int(window_steps), 1) * max(int(num_layers), 1)
+    return migration_stall_s(window_bytes, hw) / steps
+
+
+def should_migrate(stall_s: float, gain_s: float) -> bool:
+    """Accept a re-plan iff the one-off migration stall is repaid by the
+    predicted imbalance gain accrued before the next re-plan."""
+    return float(stall_s) <= float(gain_s)

@@ -1,0 +1,159 @@
+"""Chunked, fixed-shape replica-weight migration.
+
+``make_migrate_step`` builds ONE jitted step that fills up to ``chunk``
+changed slots: every rank contributes the entries whose source expert
+lives in its home shard, a psum broadcasts them (the only collective —
+bytes proportional to the chunk, not to the rank count), and each rank
+scatters the entries destined for its slot block into its store shard.
+All shapes are static, so a migration of any size is a sequence of
+identical step calls — zero recompiles, asserted by the engines'
+compile-count checks.
+
+``MigrationExecutor`` runs that sequence against a *copy* of the live
+buffers (double-buffering is free: jax arrays are immutable) under a
+per-engine-step chunk budget; the engine keeps serving on the old plan +
+old store until ``tick`` reports the commit payload.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import PlacementPlan, plan_dims
+from repro.runtime.diff import PlanDiff
+
+
+def make_migrate_step(mesh, *, num_experts: int, ep_ranks: int,
+                      dup_slots: int, ep_axis: str = "model"):
+    """Returns jitted ``step(weights, experts, layer, dst_slot, src_expert,
+    valid) -> weights`` filling the described slots.
+
+    weights: {name: (L, S, ...)} store buffers (sharded over ``ep_axis``
+    when ``mesh`` is given); experts: {name: (L, E, ...)} the home expert
+    stacks; descriptor arrays: (chunk,) replicated.
+    ``mesh=None`` builds the single-device variant (tests / profiling).
+    """
+    e_loc, n_slots = plan_dims(num_experts, ep_ranks, dup_slots)
+
+    if mesh is None:
+        def step(weights, experts, layer, dst_slot, src_expert, valid):
+            out = {}
+            for k, w in experts.items():
+                full = w[layer, src_expert]
+                li = jnp.where(valid, layer, w.shape[0])    # invalid -> drop
+                out[k] = weights[k].at[li, dst_slot].set(full, mode="drop")
+            return out
+        return jax.jit(step)
+
+    from jax.sharding import PartitionSpec as P
+    from repro.models.transformer import shard_map
+
+    def inner(weights, experts, layer, dst_slot, src_expert, valid):
+        rank = jax.lax.axis_index(ep_axis)
+        src_rank = src_expert // e_loc
+        local_e = src_expert % e_loc
+        out = {}
+        for k, w in experts.items():                 # w: (L, e_loc, ...)
+            mask = (src_rank == rank).reshape((-1,) + (1,) * (w.ndim - 2))
+            contrib = jnp.where(mask, w[layer, local_e], 0)
+            full = jax.lax.psum(contrib, ep_axis)    # chunk-sized broadcast
+            mine = (dst_slot // n_slots == rank) & valid
+            li = jnp.where(mine, layer, w.shape[0])  # not mine -> drop
+            out[k] = weights[k].at[li, dst_slot % n_slots].set(
+                full, mode="drop")
+        return out
+
+    blk = P(None, ep_axis)             # prefix spec: dim 1 = slots/experts
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(blk, blk, P(), P(), P(), P()),
+                   out_specs=blk, check_vma=False)
+    return jax.jit(fn)
+
+
+class MigrationExecutor:
+    """serve -> diff -> chunked fill -> swap state machine."""
+
+    def __init__(self, step_fn, experts: Dict[str, jnp.ndarray],
+                 entry_bytes: int, *, chunk: int = 8,
+                 chunks_per_tick: int = 0):
+        """``chunks_per_tick``: migration step calls per engine iteration
+        (the per-step budget); 0 = drain the whole diff in one tick."""
+        self.step_fn = step_fn
+        self.experts = experts
+        self.entry_bytes = int(entry_bytes)
+        self.chunk = max(int(chunk), 1)
+        self.chunks_per_tick = int(chunks_per_tick)
+        self._diff: Optional[PlanDiff] = None
+        self._back: Optional[Dict[str, jnp.ndarray]] = None
+        self._target_plan: Optional[PlacementPlan] = None
+        self._target_se: Optional[np.ndarray] = None
+        self._cursor = 0
+
+    @property
+    def active(self) -> bool:
+        return self._diff is not None
+
+    def begin(self, weights: Dict[str, jnp.ndarray], diff: PlanDiff,
+              target_plan: PlacementPlan) -> None:
+        """Stage a migration from the LIVE buffers toward ``target_plan``.
+        Restarting while active abandons the partial back buffer (the live
+        buffers were never touched, so no state is lost)."""
+        self._back = dict(weights)
+        self._diff = diff
+        self._target_plan = target_plan
+        self._target_se = np.asarray(diff.target_slot_experts)
+        self._cursor = 0
+
+    def cancel(self) -> None:
+        """Abandon an in-flight migration (the target plan was superseded
+        by a later adoption). The live buffers were never touched."""
+        self._diff = self._back = self._target_plan = self._target_se = None
+        self._cursor = 0
+
+    def _run_chunk(self) -> int:
+        d, c = self._diff, self._cursor
+        n = min(self.chunk, d.num_entries - c)
+        pad = self.chunk - n
+        sl = slice(c, c + n)
+        layer = jnp.asarray(np.pad(d.layer[sl], (0, pad)), jnp.int32)
+        dst = jnp.asarray(np.pad(d.dst_slot[sl], (0, pad)), jnp.int32)
+        src = jnp.asarray(np.pad(d.src_expert[sl], (0, pad)), jnp.int32)
+        valid = jnp.asarray(np.arange(self.chunk) < n)
+        self._back = self.step_fn(self._back, self.experts, layer, dst,
+                                  src, valid)
+        self._cursor += n
+        return n
+
+    def tick(self) -> Tuple[Optional[tuple], int]:
+        """Run up to the per-step chunk budget. Returns
+        ``(commit, bytes_moved)`` — ``commit`` is
+        ``(weights, target_plan, target_slot_experts)`` once the fill
+        completes (the engine swaps plan + store atomically), else None."""
+        if not self.active:
+            return None, 0
+        moved = 0
+        chunks = 0
+        while self._cursor < self._diff.num_entries:
+            moved += self._run_chunk()
+            chunks += 1
+            if self.chunks_per_tick and chunks >= self.chunks_per_tick:
+                break
+        if self._cursor < self._diff.num_entries:
+            return None, moved * self.entry_bytes
+        commit = (self._back, self._target_plan, self._target_se)
+        self.cancel()
+        return commit, moved * self.entry_bytes
+
+
+def migrate_all(step_fn, weights: Dict[str, jnp.ndarray], experts: Dict,
+                diff: PlanDiff, *, chunk: int = 8) -> Dict[str, jnp.ndarray]:
+    """Synchronous helper: apply a whole diff and return the new buffers
+    (the batch-engine path, where re-plans sit between batches anyway)."""
+    ex = MigrationExecutor(step_fn, experts, 0, chunk=chunk)
+    ex.begin(weights, diff, None)
+    (new_weights, _, _), _ = ex.tick()
+    return new_weights

@@ -1,0 +1,87 @@
+"""Persistent per-rank replica slot-weight buffers.
+
+The store materializes every MoE layer's slot layout as stacked
+``(L, S, ...)`` weight arrays (S = ep_ranks * n_slots), sharded over the
+EP mesh axis so each rank holds exactly its ``(n_slots, ...)`` block in
+device memory ACROSS steps. The forward pass consumes the store through
+``shard_map`` — no weight collective at all — and the
+``MigrationExecutor`` refreshes only the slots a plan switch changes.
+
+Memory: the store holds a second copy of the home experts (slots are a
+superset of the home layout), i.e. ``n_slots / e_loc`` x the expert
+weights per rank — the price of serving steps that never re-gather.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import PlacementPlan, plan_dims
+from repro.runtime import cost as _cost
+from repro.runtime.diff import stacked_slot_experts
+
+
+def store_sharding(mesh, ndim: int, ep_axis: str = "model"):
+    """NamedSharding pinning dim 1 (the slot dim) to the EP axis."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P(None, ep_axis, *([None] * (ndim - 2))))
+
+
+class ReplicaStore:
+    """Slot-weight buffers + host-side bookkeeping (slot map, versions)."""
+
+    def __init__(self, weights: Dict[str, jnp.ndarray],
+                 slot_experts: np.ndarray, *, num_experts: int,
+                 ep_ranks: int, dup_slots: int):
+        self.weights = weights                    # {name: (L, S, ...)}
+        self.slot_experts = np.asarray(slot_experts)      # (L, S) host view
+        self.num_experts = num_experts
+        self.ep_ranks = ep_ranks
+        self.dup_slots = dup_slots
+        L = self.slot_experts.shape[0]
+        self.version = np.zeros((L,), np.int64)   # bumped per layer on commit
+
+    # ------------------------------------------------------------------ init
+    @classmethod
+    def from_params(cls, experts: Dict[str, jnp.ndarray],
+                    plan_stack: PlacementPlan, *, num_experts: int,
+                    ep_ranks: int, dup_slots: int, mesh=None,
+                    ep_axis: str = "model") -> "ReplicaStore":
+        """Build the store for a stacked plan from the stacked expert
+        weights {name: (L, E, ...)}.
+
+        Unused replica slots (no live replica points at them) are filled
+        with their rank's first home expert — their contents are
+        unreachable by dispatch, the fill just keeps shapes total.
+        """
+        e_loc, n_slots = plan_dims(num_experts, ep_ranks, dup_slots)
+        se = stacked_slot_experts(plan_stack, ep_ranks, dup_slots)   # (L, S)
+        rank_of_slot = np.arange(se.shape[1]) // n_slots
+        fill = np.where(se >= 0, se, rank_of_slot[None, :] * e_loc)
+        fill_j = jnp.asarray(fill, jnp.int32)
+        weights = {k: jax.vmap(lambda w, s: w[s])(jnp.asarray(w), fill_j)
+                   for k, w in experts.items()}
+        if mesh is not None:
+            weights = {k: jax.device_put(
+                w, store_sharding(mesh, w.ndim, ep_axis))
+                for k, w in weights.items()}
+        return cls(weights, se, num_experts=num_experts, ep_ranks=ep_ranks,
+                   dup_slots=dup_slots)
+
+    # ---------------------------------------------------------------- commit
+    def adopt(self, weights: Dict[str, jnp.ndarray],
+              slot_experts: np.ndarray) -> None:
+        """Swap in a migrated buffer set (the double-buffer commit)."""
+        changed = np.any(np.asarray(slot_experts) != self.slot_experts, axis=1)
+        self.version += changed.astype(np.int64)
+        self.weights = weights
+        self.slot_experts = np.asarray(slot_experts)
+
+    # ------------------------------------------------------------------ info
+    @property
+    def entry_bytes(self) -> int:
+        return _cost.entry_bytes(self.weights)

@@ -46,6 +46,14 @@ class ControllerConfig:
     stable_interval: int = 8
     volatility_threshold: float = 0.05
     history_windows: int = 4        # windows used for the volatility estimate
+    # Migration-aware hysteresis: charge duplicating strategies the stall
+    # of the replica-weight traffic the engine MEASURED last window
+    # (repro.runtime), amortized per layer-step, so the guideline rejects
+    # a strategy whose plan churn outweighs its balance gain. The scale
+    # knob compensates when the engine serves a reduced smoke model while
+    # the controller simulates the production point (cf. skew transfer).
+    migration_aware: bool = True
+    migration_bytes_scale: float = 1.0
     # Skew transfer: when the engine measures skew on a REDUCED smoke model
     # while the controller simulates the production deployment point, the
     # achievable skew caps differ (max share is bounded by top_k/E, so
@@ -66,6 +74,7 @@ class Decision:
     strategy: str                   # strategy actually in force after this tick
     predict_interval: int
     switched: bool
+    migration_stall_s: float = 0.0  # per-layer-step stall charged this tick
     report: Optional[GPSReport] = field(default=None, repr=False)
 
 
@@ -88,13 +97,17 @@ class OnlineGPSController:
         self._skew_history: List[float] = []
         self._pending: Optional[str] = None
         self._pending_votes = 0
+        self._migration_bytes = 0.0
 
     # ------------------------------------------------------------- observe
-    def observe(self, counts: Optional[np.ndarray], now: float
-                ) -> Optional[Decision]:
+    def observe(self, counts: Optional[np.ndarray], now: float,
+                migration_bytes: float = 0.0) -> Optional[Decision]:
         """Feed one iteration's (L, E) expert histogram (None for MoE-less
-        iterations). Returns a Decision when a window closes, else None."""
+        iterations) plus the replica-weight bytes the engine's migration
+        executor moved this iteration. Returns a Decision when a window
+        closes, else None."""
         self._iters += 1
+        self._migration_bytes += float(migration_bytes)
         if counts is not None:
             c = np.asarray(counts, np.float64)
             self._counts = c if self._counts is None else self._counts + c
@@ -103,6 +116,7 @@ class OnlineGPSController:
         decision = self._evaluate(now)
         self._iters = 0
         self._counts = None
+        self._migration_bytes = 0.0
         return decision
 
     # ------------------------------------------------------------ evaluate
@@ -131,11 +145,20 @@ class OnlineGPSController:
         self._skew_history.append(skew)
         vol = self._volatility()
 
+        mig_stall = 0.0
+        if self.cfg.migration_aware and self._migration_bytes > 0:
+            from repro.runtime.cost import amortized_layer_stall_s
+            mig_stall = amortized_layer_stall_s(
+                self._migration_bytes * self.cfg.migration_bytes_scale,
+                self.cfg.hardware, num_layers=self.model_cfg.num_layers,
+                window_steps=self.cfg.window_iters)
+
         recommended, report = recommend_strategy(
             self.model_cfg, self.cfg.hardware, skew=self._transfer_skew(skew),
             batch=self.cfg.batch, seq=self.cfg.seq,
             allow_t2e=self.predictor_available,
-            min_saving=self.cfg.min_saving)
+            min_saving=self.cfg.min_saving,
+            migration_stall_s=mig_stall)
 
         # hysteresis: require `patience` consecutive windows agreeing
         switched = False
@@ -159,7 +182,8 @@ class OnlineGPSController:
         d = Decision(t=now, skew=skew, volatility=vol,
                      recommended=recommended, strategy=self.strategy,
                      predict_interval=self.predict_interval,
-                     switched=switched, report=report)
+                     switched=switched, migration_stall_s=mig_stall,
+                     report=report)
         self.decisions.append(d)
         return d
 

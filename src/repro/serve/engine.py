@@ -33,7 +33,8 @@ from repro.core.predictors import DistributionEstimator
 from repro.models.transformer import Runtime, forward, init_cache
 from repro.serve.kvcache import (BlockAllocator, init_block_pool,
                                  write_prefill_blocks)
-from repro.serve.metrics import RequestTiming, ServeMetrics
+from repro.serve.metrics import (RequestTiming, ServeMetrics, imbalance,
+                                 plan_rank_loads)
 from repro.serve.scheduler import (ContinuousScheduler, IterationPlan,
                                    ServeRequest)
 from repro.train.steps import (make_decode_step, make_paged_decode_step,
@@ -46,6 +47,35 @@ class _nullcontext:
         return self
     def __exit__(self, *a):
         return False
+
+
+# ---------------------------------------------------------------------------
+# XLA compile counting — the no-recompile guarantee under a mesh.
+#
+# ``jitted_fn._cache_size()`` is exact on a single device, but under a mesh
+# the C++ fastpath adds one cache entry per call for freshly-minted GSPMD
+# output shardings WITHOUT recompiling anything (observed on jax 0.4.37,
+# verified against the backend-compile log). Meshed engines therefore count
+# actual backend compilations through jax.monitoring instead.
+# ---------------------------------------------------------------------------
+
+_BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_xla_compiles = [0]
+_compile_listener_installed = False
+
+
+def _install_compile_listener():
+    global _compile_listener_installed
+    if _compile_listener_installed:
+        return
+    _compile_listener_installed = True
+    from jax import monitoring
+
+    def _on_event(event, duration, **kw):
+        if event == _BACKEND_COMPILE_EVENT:
+            _xla_compiles[0] += 1
+
+    monitoring.register_event_duration_secs_listener(_on_event)
 
 
 @dataclass
@@ -74,6 +104,9 @@ class ServeEngine:
         self.batches_seen = 0
         self._plan_stack: Optional[PlacementPlan] = None
         self.history: List[Dict] = []         # per-batch balance telemetry
+        self._store = None                    # repro.runtime.ReplicaStore
+        self._migrate_fn = None
+        self._last_migration: Dict = {}
 
         use_dup = cfg.is_moe and serve.strategy != "none"
         dup_slots = serve.dup_slots if use_dup else 0
@@ -114,8 +147,54 @@ class ServeEngine:
             res = duplicate_experts_host(dist[l], self.ep_ranks,
                                          m.duplication_slots, m.max_copies)
             plans.append(res.plan)
-        self._plan_stack = stack_plans(plans)
+        self._plan_stack = self._adopt_plan(stack_plans(plans))
         return self._plan_stack
+
+    # --------------------------------------------------------- replica store
+    @property
+    def _store_mode(self) -> bool:
+        """Persistent slot-weight buffers instead of the per-step pool
+        gather. In-graph replanning keeps the gather oracle: its plan is a
+        traced value, and migration is a host decision."""
+        return (self.cfg.is_moe and self.mesh is not None
+                and self.moe_cfg.duplication_slots > 0
+                and self.moe_cfg.replica_impl == "store"
+                and not self.serve.in_graph_replan)
+
+    def _slot_weights_arg(self):
+        if not self._store_mode:
+            return None
+        if self._store is None:
+            from repro.runtime import ReplicaStore, make_migrate_step
+            m = self.moe_cfg
+            experts = self.params["layers"]["moe"]["experts"]
+            self._store = ReplicaStore.from_params(
+                experts, self._current_plan(), num_experts=m.num_experts,
+                ep_ranks=self.ep_ranks, dup_slots=m.duplication_slots,
+                mesh=self.mesh)
+            self._migrate_fn = make_migrate_step(
+                self.mesh, num_experts=m.num_experts, ep_ranks=self.ep_ranks,
+                dup_slots=m.duplication_slots)
+        return self._store.weights
+
+    def _adopt_plan(self, target: PlacementPlan) -> PlacementPlan:
+        """Pay weight movement once per re-plan: migrate exactly the slots
+        the plan switch changes, then swap (synchronously — this engine
+        re-plans between batches anyway)."""
+        if not self._store_mode or self._store is None:
+            return target
+        from repro.runtime import migrate_all, plan_diff
+        m = self.moe_cfg
+        diff = plan_diff(self._current_plan(), target, self.ep_ranks,
+                         m.duplication_slots)
+        moved = diff.num_entries * self._store.entry_bytes
+        if diff.num_entries:
+            weights = migrate_all(
+                self._migrate_fn, self._store.weights,
+                self.params["layers"]["moe"]["experts"], diff)
+            self._store.adopt(weights, diff.target_slot_experts)
+        self._last_migration = {"entries": diff.num_entries, "bytes": moved}
+        return target
 
     def _current_plan(self) -> Optional[PlacementPlan]:
         if self._plan_stack is None:
@@ -166,8 +245,9 @@ class ServeEngine:
                     self.params, batch, cache, plan, pred)
                 self._plan_stack = next_plan
             else:
-                logits, cache, stats = prefill_step(self.params, batch,
-                                                    cache, plan, pred)
+                logits, cache, stats = prefill_step(
+                    self.params, batch, cache, plan, pred,
+                    self._slot_weights_arg())
         self._observe(stats, num_tokens=B * S,
                       skip_replan=getattr(self, "_in_graph", False))
         return logits, cache, stats
@@ -178,7 +258,8 @@ class ServeEngine:
         ctx = self.mesh or _nullcontext()
         with ctx:
             next_tok, logits, cache, stats = decode_step(
-                self.params, tokens, cache, cache_len, plan)
+                self.params, tokens, cache, cache_len, plan,
+                self._slot_weights_arg())
         return next_tok, logits, cache, stats
 
     def generate(self, batch: Dict, max_new_tokens: int = 8):
@@ -209,6 +290,9 @@ class ServeEngine:
         if (not skip_replan and self.serve.strategy != "none"
                 and self.batches_seen % self.serve.predict_interval == 0):
             self.replan()
+            if self._last_migration:
+                tele["migration_entries"] = self._last_migration["entries"]
+                tele["migration_bytes"] = self._last_migration["bytes"]
 
     # ------------------------------------------------------------- telemetry
     def rank_loads(self, slot_counts: np.ndarray) -> np.ndarray:
@@ -245,6 +329,13 @@ class ContinuousConfig:
     ema: float = 0.9                  # estimator moving average
     eos_id: int = -1                  # -1: generate exactly max_new_tokens
     metrics_window: int = 16          # iterations per metrics window
+    # Replica-weight migration (repro.runtime; active when the engine runs
+    # EP on a mesh with dup_slots > 0 and moe.replica_impl == "store")
+    migrate_chunk: int = 8            # slot entries per fixed-shape step
+    migrate_chunks_per_step: int = 0  # chunk steps per engine iteration
+                                      # (0 = drain the diff at replan time)
+    migration_gate: bool = True       # reject re-plans whose stall exceeds
+                                      # the predicted imbalance gain
 
     def __post_init__(self):
         if self.prefill_len % self.block_size:
@@ -297,6 +388,8 @@ class ContinuousEngine:
         self.ccfg = ccfg
         self.mesh = mesh
         self.ep_ranks = ep_ranks
+        if mesh is not None:
+            _install_compile_listener()
         self.predictor = predictor
         self.controller = controller
         self.strategy = ccfg.strategy
@@ -341,6 +434,34 @@ class ContinuousEngine:
         self._temp_cache = init_cache(cfg, self.rt, 1, ccfg.prefill_len)
         self._warm = False
 
+        # ----------------------------------------------- replica-weight store
+        self._store = None
+        self._executor = None
+        self._migrate_fn = None
+        self._entry_bytes = 0
+        self._recent_step_s = 0.0
+        self._step_migration_bytes = 0.0
+        if cfg.is_moe:
+            from repro.runtime import cost as _mig_cost
+            self._entry_bytes = _mig_cost.entry_bytes(
+                params["layers"]["moe"]["experts"])
+        if (cfg.is_moe and mesh is not None and ccfg.dup_slots > 0
+                and cfg.moe.replica_impl == "store"):
+            from repro.runtime import (MigrationExecutor, ReplicaStore,
+                                       make_migrate_step)
+            m = self.moe_cfg
+            experts = params["layers"]["moe"]["experts"]
+            self._store = ReplicaStore.from_params(
+                experts, self._current_plan(), num_experts=m.num_experts,
+                ep_ranks=ep_ranks, dup_slots=m.duplication_slots, mesh=mesh)
+            self._migrate_fn = make_migrate_step(
+                mesh, num_experts=m.num_experts, ep_ranks=ep_ranks,
+                dup_slots=m.duplication_slots)
+            self._executor = MigrationExecutor(
+                self._migrate_fn, experts, self._store.entry_bytes,
+                chunk=ccfg.migrate_chunk,
+                chunks_per_tick=ccfg.migrate_chunks_per_step)
+
     # ------------------------------------------------------------------ plan
     def _identity_stack(self) -> Optional[PlacementPlan]:
         if not self.cfg.is_moe:
@@ -358,15 +479,85 @@ class ContinuousEngine:
     def replan(self):
         """Algorithm 1 per layer from the estimator's current prediction."""
         if not self.cfg.is_moe or self.strategy == "none":
-            self._plan_stack = self._identity_stack()
-            return self._plan_stack
+            return self._adopt_plan(self._identity_stack())
         m = self.moe_cfg
         dist = self.estimator.predict()
         plans = [duplicate_experts_host(dist[l], self.ep_ranks,
                                         m.duplication_slots, m.max_copies).plan
                  for l in range(self.cfg.num_layers)]
-        self._plan_stack = stack_plans(plans)
+        return self._adopt_plan(stack_plans(plans))
+
+    # ------------------------------------------------------ replica migration
+    def _hw(self):
+        from repro.core.simulator import A100_PCIE
+        return self.controller.cfg.hardware if self.controller else A100_PCIE
+
+    def _adopt_plan(self, target):
+        """serve -> diff -> chunked fill -> swap. Without a store the plan
+        swaps immediately (and the diff is still costed, so dispatcherless
+        smoke deployments surface the plan-churn bytes a real EP cluster
+        would pay); with one, only changed slots are filled and serving
+        stays on the OLD plan until the executor commits."""
+        if (target is None or self._plan_stack is None
+                or not self.cfg.is_moe
+                or self.moe_cfg.duplication_slots == 0):
+            self._plan_stack = target
+            return target
+        from repro.runtime import migration_stall_s, plan_diff
+        m = self.moe_cfg
+        diff = plan_diff(self._plan_stack, target, self.ep_ranks,
+                         m.duplication_slots)
+        planned = diff.num_entries * self._entry_bytes
+        stall = migration_stall_s(planned, self._hw())
+        self.metrics.record_migration(replanned=True, planned_bytes=planned,
+                                      stall_s=stall)
+        if self._store is None or diff.num_entries == 0:
+            # no store to fill, or the switch moves no weights (replica
+            # routing tables can shrink without any slot changing expert);
+            # an in-flight migration toward an older target is superseded
+            if self._executor is not None:
+                self._executor.cancel()
+            self._plan_stack = target
+            return target
+        if not self._migration_accept(stall, target):
+            self.metrics.record_migration(rejected=True)
+            return self._plan_stack
+        self._executor.begin(self._store.weights, diff, target)
+        if self.ccfg.migrate_chunks_per_step == 0:
+            self._tick_migration()              # drain + commit right away
         return self._plan_stack
+
+    def _migration_accept(self, stall_s: float, target) -> bool:
+        """Hysteresis: a re-plan must repay its weight movement with
+        predicted imbalance gain before the next re-plan."""
+        if not self.ccfg.migration_gate or self._recent_step_s <= 0:
+            return True
+        from repro.runtime import should_migrate
+        m = self.moe_cfg
+        counts = self.estimator.predict()
+        old = imbalance(plan_rank_loads(counts, self._plan_stack,
+                                        self.ep_ranks, m.duplication_slots))
+        new = imbalance(plan_rank_loads(counts, target, self.ep_ranks,
+                                        m.duplication_slots))
+        gain_frac = max(old - new, 0.0) / max(old, 1e-9)
+        gain_s = gain_frac * max(self.predict_interval, 1) * self._recent_step_s
+        return should_migrate(stall_s, gain_s)
+
+    def _tick_migration(self):
+        """Run the per-step migration budget; swap plan + store on commit."""
+        if self._executor is None or not self._executor.active:
+            return
+        with self.mesh:          # same lowering context as warmup's compile
+            commit, moved = self._executor.tick()
+        if moved:
+            # the stall was already costed at replan time (planned bytes)
+            self._step_migration_bytes += moved
+            self.metrics.record_migration(bytes_moved=moved)
+        if commit is not None:
+            weights, plan, se = commit
+            self._store.adopt(weights, se)
+            self._plan_stack = plan
+            self.metrics.record_migration(committed=True)
 
     # --------------------------------------------------------------- predict
     def _shape_predictions(self, tokens: np.ndarray):
@@ -397,12 +588,22 @@ class ContinuousEngine:
         preds = [None]
         if self.predictor is not None:
             preds.append(self._shape_predictions(toks))
+        slot_w = self._store.weights if self._store is not None else None
         ctx = self.mesh or _nullcontext()
         with ctx:
+            if self._migrate_fn is not None:
+                # compile the migration step once (a no-op chunk: every
+                # entry invalid) so later plan switches never compile
+                z = jnp.zeros((self.ccfg.migrate_chunk,), jnp.int32)
+                jax.block_until_ready(self._migrate_fn(
+                    self._store.weights,
+                    self.params["layers"]["moe"]["experts"],
+                    z, z, z, jnp.zeros((self.ccfg.migrate_chunk,), bool)))
             for pred in preds:
                 _, _, temp, _ = jax.block_until_ready(self._prefill_fn(
                     self.params, {"tokens": jnp.asarray(toks)},
-                    self._temp_cache, plan, pred, last, jnp.asarray(tw)))
+                    self._temp_cache, plan, pred, last, jnp.asarray(tw),
+                    slot_w))
             dec_toks = jnp.zeros((ccfg.max_slots, 1), jnp.int32)
             tables = jnp.zeros(
                 (ccfg.max_slots, self.scheduler.tables.max_blocks_per_slot),
@@ -416,15 +617,54 @@ class ContinuousEngine:
                 self.pool = jax.block_until_ready(
                     self._write_fn(self.pool, temp, table))
                 out = self._decode_fn(self.params, dec_toks, self.pool,
-                                      tables, lens, plan, aw)
+                                      tables, lens, plan, aw, slot_w)
                 self.pool = jax.block_until_ready(out[2])
+            if self.mesh is not None:
+                self._warm_converts()
+        if self.mesh is not None:
+            # the serving loop builds some device arrays OUTSIDE the mesh
+            # context (jit cache keys include it) and re-plans on the host;
+            # warm both so the backend-compile counter stays flat
+            self._warm_converts()
+            if self.cfg.is_moe and self.strategy != "none":
+                self.replan()       # estimator is empty -> identity plan,
+                                    # but the plan-build programs compile
+                while self._executor is not None and self._executor.active:
+                    self._tick_migration()      # never leak a warmup fill
+                # warmup's replan must not count as serving plan churn
+                self.metrics.migration = dict.fromkeys(
+                    self.metrics.migration, 0.0)
         self._warm = True
         self._compile_baseline = self.compile_counts()
 
+    def _warm_converts(self):
+        """Compile the np->device conversion programs ``step()`` issues
+        (their avals differ from the zeros used to warm the step fns)."""
+        ccfg = self.ccfg
+        t = self.scheduler.tables
+        jax.block_until_ready((
+            jnp.asarray([0], jnp.int32),
+            jnp.asarray(t.tables[0, :ccfg.prefill_len // ccfg.block_size],
+                        jnp.int32),
+            jnp.asarray(self._last_tokens[:, None]),
+            jnp.asarray(t.tables),
+            jnp.asarray(t.lengths),
+            jnp.asarray(np.zeros((ccfg.max_slots, 1), np.float32)),
+            jnp.asarray(np.zeros((1, ccfg.prefill_len), np.float32)),
+            jnp.asarray(np.zeros((1, ccfg.prefill_len), np.int32)),
+        ))
+
     def compile_counts(self) -> Dict[str, int]:
-        """Per-step-function XLA cache sizes (for the no-recompile check)."""
+        """Compilation state for the no-recompile check: per-step-function
+        jit cache sizes on a single device, the process-wide backend
+        compile count under a mesh (where per-fn cache sizes overcount —
+        see ``_install_compile_listener``)."""
+        if self.mesh is not None:
+            return {"xla_compiles": _xla_compiles[0]}
         out = {}
-        for name in ("_prefill_fn", "_decode_fn", "_write_fn"):
+        names = ("_prefill_fn", "_decode_fn", "_write_fn") + (
+            ("_migrate_fn",) if self._migrate_fn is not None else ())
+        for name in names:
             fn = getattr(self, name)
             try:
                 out[name] = fn._cache_size()
@@ -434,15 +674,17 @@ class ContinuousEngine:
 
     def profile_phases(self, iters: int = 3, impl: Optional[str] = None
                        ) -> Dict[str, float]:
-        """Measure the dispatch phase breakdown (route/pack/a2a/ffn/combine)
-        at this deployment's prefill shape. The breakdown is recorded into
+        """Measure the dispatch phase breakdown (route/pack/a2a/ffn/combine,
+        plus the ``migrate`` chunk-fill cost when duplication is on) at
+        this deployment's prefill shape. The breakdown is recorded into
         ``metrics`` only when it profiles the ACTIVE ``dispatch_impl`` —
         what-if runs with an ``impl`` override just return their numbers,
         so repeated calls can't corrupt the reported phase columns.
-        Returns seconds per phase."""
+        Returns seconds per phase; ``migrate`` is NOT part of ``total``
+        (it is paid per plan switch, not per step)."""
         if not self.cfg.is_moe:
             return {}
-        from repro.moe.profile import dispatch_phase_times
+        from repro.moe.profile import dispatch_phase_times, migrate_phase_time
         m = self.moe_cfg
         phases = dispatch_phase_times(
             d_model=self.cfg.d_model, d_ff=m.d_ff_expert,
@@ -451,6 +693,12 @@ class ContinuousEngine:
             capacity_factor=m.capacity_factor,
             impl=impl or m.dispatch_impl, activation=self.cfg.activation,
             iters=iters)
+        if m.duplication_slots > 0:
+            phases.update(migrate_phase_time(
+                d_model=self.cfg.d_model, d_ff=m.d_ff_expert,
+                num_experts=m.num_experts, ranks=self.ep_ranks,
+                dup_slots=m.duplication_slots, layers=self.cfg.num_layers,
+                chunk=self.ccfg.migrate_chunk, iters=iters))
         if (impl is None or impl == m.dispatch_impl) \
                 and not self.metrics.phase_times:
             self.metrics.record_phases(phases)
@@ -486,7 +734,10 @@ class ContinuousEngine:
         iter_counts = None
         prefill_tokens = 0
         ctx = self.mesh or _nullcontext()
+        self._step_migration_bytes = 0.0
+        self._tick_migration()       # commit BEFORE this iteration's plan read
         plan = self._current_plan()
+        slot_w = self._store.weights if self._store is not None else None
 
         splan: IterationPlan = sched.schedule(now)
 
@@ -505,7 +756,8 @@ class ContinuousEngine:
             with ctx:
                 next_tok, _, temp, stats = self._prefill_fn(
                     self.params, {"tokens": jnp.asarray(toks)},
-                    self._temp_cache, plan, pred, last, jnp.asarray(tw))
+                    self._temp_cache, plan, pred, last, jnp.asarray(tw),
+                    slot_w)
                 self.pool = self._write_fn(self.pool, temp, table)
             tok0 = int(np.asarray(next_tok)[0, 0])
             req.generated.append(tok0)
@@ -534,7 +786,7 @@ class ContinuousEngine:
                     self.params, jnp.asarray(self._last_tokens[:, None]),
                     self.pool, jnp.asarray(sched.tables.tables),
                     jnp.asarray(sched.tables.lengths), plan,
-                    jnp.asarray(active))
+                    jnp.asarray(active), slot_w)
             nt = np.asarray(next_tok)
             for slot in decode_slots:
                 req = sched.slots[slot]
@@ -556,13 +808,18 @@ class ContinuousEngine:
                 self.replan()
         decision = None
         if self.controller is not None and self.cfg.is_moe:
-            decision = self.controller.observe(iter_counts, now)
+            decision = self.controller.observe(
+                iter_counts, now,
+                migration_bytes=self._step_migration_bytes)
             if decision is not None:
                 self._apply_decision(decision)
         events.decision = decision
 
+        dt = clock() - now
+        self._recent_step_s = (dt if self._recent_step_s <= 0
+                               else 0.9 * self._recent_step_s + 0.1 * dt)
         self.metrics.record_iteration(
-            now, clock() - now, prefill_tokens=prefill_tokens,
+            now, dt, prefill_tokens=prefill_tokens,
             decode_tokens=len(decode_slots),
             counts=iter_counts, plan=self._plan_stack,
             ep_ranks=self.ep_ranks,
@@ -595,10 +852,11 @@ class ContinuousEngine:
     def _apply_decision(self, decision):
         if decision.strategy != self.strategy:
             self.strategy = decision.strategy
-            if self.strategy == "none":
-                self._plan_stack = self._identity_stack()
-            else:
-                self.replan()
+            # replan() handles "none" too (identity stack through
+            # _adopt_plan, which also cancels any in-flight migration —
+            # a direct _plan_stack write here would let a stale commit
+            # reinstate the abandoned duplicated plan)
+            self.replan()
         self.predict_interval = decision.predict_interval
 
     # ------------------------------------------------------------ trace run

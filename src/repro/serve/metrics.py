@@ -129,6 +129,12 @@ class ServeMetrics:
         self.timings: List[RequestTiming] = []
         self.windows: List[WindowRecord] = []
         self.phase_times: Dict[str, float] = {}   # dispatch phase breakdown
+        # replica-weight migration accounting (repro.runtime): planned =
+        # bytes a re-plan's diff would move; moved = bytes actually shipped
+        # by the executor; stall = modeled serialized wire time
+        self.migration: Dict[str, float] = {
+            "planned_bytes": 0.0, "bytes_moved": 0.0, "stall_s": 0.0,
+            "replans": 0.0, "commits": 0.0, "rejected": 0.0}
         self._win_counts: Optional[np.ndarray] = None
         self._win: Optional[WindowRecord] = None
         self._t0: Optional[float] = None
@@ -185,6 +191,21 @@ class ServeMetrics:
         for k, v in phases.items():
             self.phase_times[k] = self.phase_times.get(k, 0.0) + float(v)
 
+    # ----------------------------------------------------------- migration
+    def record_migration(self, *, planned_bytes: float = 0.0,
+                         bytes_moved: float = 0.0, stall_s: float = 0.0,
+                         replanned: bool = False, committed: bool = False,
+                         rejected: bool = False):
+        """Account one replica-migration event (re-plan diffed, chunk
+        executed, swap committed, or re-plan rejected by the cost gate)."""
+        m = self.migration
+        m["planned_bytes"] += float(planned_bytes)
+        m["bytes_moved"] += float(bytes_moved)
+        m["stall_s"] += float(stall_s)
+        m["replans"] += bool(replanned)
+        m["commits"] += bool(committed)
+        m["rejected"] += bool(rejected)
+
     # ---------------------------------------------------------- per-request
     def record_completion(self, t: RequestTiming):
         self.timings.append(t)
@@ -204,8 +225,15 @@ class ServeMetrics:
         total_tokens = sum(t.new_tokens for t in ts)
         phase_cols = {f"phase_{k}_us": v * 1e6
                       for k, v in self.phase_times.items()}
+        mig = self.migration
         return {
             **phase_cols,
+            "migration_planned_bytes": mig["planned_bytes"],
+            "migration_bytes_moved": mig["bytes_moved"],
+            "migration_stall_us": mig["stall_s"] * 1e6,
+            "migration_replans": mig["replans"],
+            "migration_commits": mig["commits"],
+            "migration_rejected": mig["rejected"],
             "completed": float(len(ts)),
             "ttft_p50": _pct(ttfts, 50), "ttft_p99": _pct(ttfts, 99),
             "tpot_mean": float(np.mean(tpots)) if tpots else 0.0,

@@ -86,10 +86,12 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, lr_fn=None,
 
 
 def make_prefill_step(cfg: ModelConfig, rt: Runtime):
-    def prefill_step(params, batch, cache, plan=None, predicted_idx=None):
+    def prefill_step(params, batch, cache, plan=None, predicted_idx=None,
+                     slot_weights=None):
         logits, cache, stats = forward(params, cfg, batch, rt, mode="prefill",
                                        cache=cache, plan=plan,
-                                       predicted_idx=predicted_idx)
+                                       predicted_idx=predicted_idx,
+                                       slot_weights=slot_weights)
         return logits, cache, stats
     return prefill_step
 
@@ -101,6 +103,10 @@ def make_prefill_replan_step(cfg: ModelConfig, rt: Runtime):
     batch's duplication in-graph from this batch's expert histogram via
     the jittable Algorithm 1 (`duplicate_experts_jax`, vmapped over
     layers) — no host round-trip per prediction interval.
+
+    Stays on the per-step gather pool: the replica store is filled by a
+    HOST-orchestrated migration (plan diffing is a host decision), which
+    would defeat the point of planning in-graph.
     """
     from repro.core.duplication import duplicate_experts_jax
 
@@ -128,12 +134,13 @@ def make_slot_prefill_step(cfg: ModelConfig, rt: Runtime):
     masks padding out of the MoE expert histograms. Everything is traced,
     so one compile per prompt-length bucket."""
     def prefill_step(params, batch, cache, plan=None, predicted_idx=None,
-                     last_pos=None, token_weight=None):
+                     last_pos=None, token_weight=None, slot_weights=None):
         logits, cache, stats = forward(params, cfg, batch, rt, mode="prefill",
                                        cache=cache, plan=plan,
                                        predicted_idx=predicted_idx,
                                        last_pos=last_pos,
-                                       token_weight=token_weight)
+                                       token_weight=token_weight,
+                                       slot_weights=slot_weights)
         next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
         return next_tok, logits, cache, stats
     return prefill_step
@@ -146,22 +153,25 @@ def make_paged_decode_step(cfg: ModelConfig, rt: Runtime):
     traced (B,) vector — no recompilation as requests join/leave). Returns
     greedy next tokens for every slot; the engine masks idle slots."""
     def decode_step(params, tokens, pool, block_tables, lengths, plan=None,
-                    token_weight=None):
+                    token_weight=None, slot_weights=None):
         logits, pool, stats = forward(params, cfg, {"tokens": tokens}, rt,
                                       mode="decode", cache=pool,
                                       cache_len=lengths, plan=plan,
                                       block_tables=block_tables,
-                                      token_weight=token_weight)
+                                      token_weight=token_weight,
+                                      slot_weights=slot_weights)
         next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
         return next_tok, logits, pool, stats
     return decode_step
 
 
 def make_decode_step(cfg: ModelConfig, rt: Runtime):
-    def decode_step(params, tokens, cache, cache_len, plan=None):
+    def decode_step(params, tokens, cache, cache_len, plan=None,
+                    slot_weights=None):
         logits, cache, stats = forward(params, cfg, {"tokens": tokens}, rt,
                                        mode="decode", cache=cache,
-                                       cache_len=cache_len, plan=plan)
+                                       cache_len=cache_len, plan=plan,
+                                       slot_weights=slot_weights)
         next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
         return next_tok, logits, cache, stats
     return decode_step
