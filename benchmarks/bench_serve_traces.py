@@ -13,11 +13,21 @@ acceptance test — tests/test_continuous_serve.py calls ``run`` too):
   * the controller switches strategy at least once as the trace's topic
     mixture (and hence measured skew) shifts;
   * zero XLA recompilation after ``warmup()``.
+
+A second, MESHED smoke section (subprocess, 8 fake host devices) runs the
+ContinuousEngine on a real EP mesh in store mode with overlapped
+migration, and reports a step-time SLO column: ``meshed_step_p50_ms``
+against ``meshed_slo_ms``, plus the backend-compile count after warmup.
+``check_regression`` gates both (no recompiles, SLO met).
 """
 
 from __future__ import annotations
 
+import json
 import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import numpy as np
@@ -25,6 +35,74 @@ import numpy as np
 
 def _smoke() -> bool:
     return os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+# Step-time SLO for the meshed smoke deployment (p50, generous: CPU CI
+# machines vary ~2x; a recompile-per-step regression blows through it by
+# an order of magnitude, which is what the column is there to catch).
+MESHED_SLO_MS = 2500.0
+
+_MESHED_SUB = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax, numpy as np
+from repro.configs.registry import get_config
+from repro.models.transformer import init_model
+from repro.serve import ContinuousConfig, ContinuousEngine
+from repro.serve.scheduler import ServeRequest
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = get_config("mixtral-8x7b").reduced()
+params = init_model(jax.random.PRNGKey(0), cfg)
+ccfg = ContinuousConfig(max_slots=4, prefill_len=32, block_size=16,
+                        max_len=48, strategy="dist_only",
+                        predict_interval=4, dup_slots=1, metrics_window=4)
+eng = ContinuousEngine(cfg, params, ccfg, mesh=mesh, ep_ranks=4)
+eng.warmup()
+rng = np.random.default_rng(0)
+for i in range(6):
+    eng.submit(ServeRequest(rid=i, arrival=0.0,
+                            tokens=rng.integers(0, cfg.vocab_size,
+                                                16).tolist(),
+                            max_new_tokens=4))
+walls = []
+n = 0
+while eng.has_work() and n < 40:
+    t0 = time.perf_counter()
+    eng.step(float(n))
+    walls.append(time.perf_counter() - t0)
+    n += 1
+recompiled = 0
+try:
+    eng.assert_no_recompiles()
+except AssertionError:
+    recompiled = 1
+eng.metrics.flush(eng._plan_stack, eng.ep_ranks, 1)
+s = eng.metrics.summary()
+print(json.dumps({
+    "step_p50_ms": float(np.percentile(walls, 50) * 1e3),
+    "step_p99_ms": float(np.percentile(walls, 99) * 1e3),
+    "iterations": n,
+    "recompiled": recompiled,
+    "completed": int(s["completed"]),
+    "migration_commits": s["migration_commits"],
+    "migration_hidden_s": s["migration_hidden_s"],
+}))
+"""
+
+
+def _run_meshed() -> dict:
+    import repro
+    src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_MESHED_SUB)],
+        capture_output=True, text=True, timeout=1800,
+        env=dict(os.environ, PYTHONPATH=src_root))
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"meshed serve subprocess failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 def run(verbose: bool = True, smoke: bool = None):
@@ -82,6 +160,15 @@ def run(verbose: bool = True, smoke: bool = None):
     n_completed = int(s["completed"])
     n_switches = controller.num_switches
 
+    meshed = _run_meshed()
+    s = dict(s,
+             meshed_step_p50_ms=meshed["step_p50_ms"],
+             meshed_step_p99_ms=meshed["step_p99_ms"],
+             meshed_recompiled=float(meshed["recompiled"]),
+             meshed_completed=float(meshed["completed"]),
+             meshed_slo_ms=MESHED_SLO_MS,
+             meshed_slo_ok=float(meshed["step_p50_ms"] <= MESHED_SLO_MS))
+
     if verbose:
         print(f"trace: {len(trace)} requests over {horizon:.0f}s (virtual), "
               f"served by {end:.1f}s | iterations={eng.iterations}")
@@ -105,7 +192,17 @@ def run(verbose: bool = True, smoke: bool = None):
               f"planned={s['migration_planned_bytes'] / 1e6:.2f}MB "
               f"moved={s['migration_bytes_moved'] / 1e6:.2f}MB "
               f"stall={s['migration_stall_us']:.0f}us "
-              f"rejected={int(s['migration_rejected'])}")
+              f"(hidden={s['migration_hidden_s']*1e6:.0f}us / "
+              f"exposed={s['migration_exposed_s']*1e6:.0f}us) "
+              f"rejected={int(s['migration_rejected'])} "
+              f"prebegun={int(s['migration_prebegun'])} "
+              f"cancelled={int(s['migration_cancelled'])}")
+        print(f"meshed EP smoke: step p50={s['meshed_step_p50_ms']:.0f}ms "
+              f"p99={s['meshed_step_p99_ms']:.0f}ms "
+              f"(SLO {s['meshed_slo_ms']:.0f}ms -> "
+              f"{'OK' if s['meshed_slo_ok'] else 'MISS'}), "
+              f"recompiles={int(s['meshed_recompiled'])}, "
+              f"completed={int(s['meshed_completed'])}")
         if phases:
             print("\ndispatch phase breakdown (prefill shape, "
                   f"impl={eng.moe_cfg.dispatch_impl}):")
@@ -116,6 +213,9 @@ def run(verbose: bool = True, smoke: bool = None):
             if "migrate" in phases:
                 print(f"  {'migrate':8s} {phases['migrate']*1e6:9.0f}us "
                       "(per plan-switch chunk, not per step)")
+            if "prefetch" in phases:
+                print(f"  {'prefetch':8s} {phases['prefetch']*1e6:9.0f}us "
+                      "(overlapped-fill issue cost on the critical path)")
 
     assert n_completed == len(trace), (n_completed, len(trace))
     if not smoke:
@@ -124,7 +224,8 @@ def run(verbose: bool = True, smoke: bool = None):
     derived = (f"completed={n_completed}/{len(trace)} "
                f"switches={n_switches} "
                f"ttft_p99={s['ttft_p99']*1e3:.0f}ms "
-               f"tpot_p99={s['tpot_p99']*1e3:.0f}ms")
+               f"tpot_p99={s['tpot_p99']*1e3:.0f}ms "
+               f"meshed_p50={s['meshed_step_p50_ms']:.0f}ms")
     return s, derived
 
 

@@ -10,9 +10,13 @@ committed baseline and FAILS (exit 1) when:
   * total smoke wall time regressed by more than ``--tol`` (default 25%),
   * any bench that passed in the baseline now fails,
   * the dispatch bench's measured pack speedup fell below 1.0 (the sort
-    hot path must never be slower than the one-hot oracle it replaced), or
+    hot path must never be slower than the one-hot oracle it replaced),
   * the migration bench's store speedup fell below 1.0 (persistent replica
-    buffers must never be slower than the per-step pool gather).
+    buffers must never be slower than the per-step pool gather),
+  * overlapped migration hides less than half the plan-switch stall, or
+    its final store diverges from the synchronous path (bit-exactness), or
+  * the meshed continuous-serving smoke recompiled after warmup or missed
+    its step-time SLO.
 
 Escape hatch: set ``REPRO_BENCH_REFRESH_BASELINE=1`` to overwrite the
 baseline with the current measurement instead of gating (use when a
@@ -58,6 +62,26 @@ def compare(current: dict, baseline: dict, tol: float) -> list:
         failures.append(
             f"replica store slower than the per-step gather it replaces: "
             f"store_speedup={store_speedup:.2f}x")
+    hidden = mig.get("overlap_hidden_fraction")
+    if hidden is not None and hidden < 0.5:
+        failures.append(
+            f"overlapped migration hides <50% of the plan-switch stall: "
+            f"hidden_fraction={hidden:.2f}")
+    bitexact = mig.get("overlap_bitexact")
+    if bitexact is not None and bitexact != 1.0:
+        failures.append(
+            "overlapped migration diverged from the synchronous path "
+            "(bit-exactness check failed)")
+    serve = (current.get("benches", {})
+             .get("serve_traces_continuous", {}).get("summary") or {})
+    if serve.get("meshed_recompiled", 0.0):
+        failures.append(
+            "meshed continuous serving recompiled after warmup")
+    if serve.get("meshed_slo_ok", 1.0) != 1.0:
+        failures.append(
+            f"meshed serving step-time SLO missed: "
+            f"p50={serve.get('meshed_step_p50_ms', 0):.0f}ms > "
+            f"{serve.get('meshed_slo_ms', 0):.0f}ms")
     return failures
 
 

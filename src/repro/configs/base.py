@@ -40,6 +40,18 @@ class MoEConfig:
     # changes; "gather": per-step all_gather replica pool (bit-exact
     # oracle, and the fallback whenever no store is threaded in).
     replica_impl: str = "store"
+    # Overlapped (async-prefetch) migration: plan-diff fills are staged
+    # per layer and issued during the forward pass instead of between
+    # engine steps — forward() selects old-plan slots per layer until
+    # that layer's fill commits (repro.runtime.LayerStagedExecutor).
+    # False restores the synchronous drain-at-replan path.
+    overlap_migration: bool = True
+    # Per-rank HBM budget (GB) for the replica store (which holds a second
+    # copy of the home experts plus the replica slots). 0 = unlimited;
+    # otherwise engines clamp duplication_slots down until the store fits
+    # (core.placement.clamp_dup_slots) so the prefetcher cannot
+    # over-replicate past device memory.
+    store_hbm_budget_gb: float = 0.0
 
 
 @dataclass(frozen=True)

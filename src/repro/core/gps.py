@@ -185,6 +185,7 @@ def run_gps(
     scenario: str = "typical",
     comm_model: str = "paper",
     migration_stall_s: float = 0.0,
+    migration_hidden_frac: float = 0.0,
 ) -> GPSReport:
     """Evaluate all strategies for one (model, hardware, skew) point.
 
@@ -193,6 +194,13 @@ def run_gps(
     ``repro.runtime.cost.amortized_layer_stall_s``). Charged as overhead
     to every DUPLICATING strategy, so a strategy whose predicted balance
     gain is smaller than its weight movement loses to the baseline.
+
+    ``migration_hidden_frac``: fraction of that stall the deployment's
+    async prefetcher hides under forward compute (layer-staged overlapped
+    fills, ``repro.runtime.LayerStagedExecutor``) — only the EXPOSED
+    remainder ``(1 - frac) * stall`` is charged, so the verdict reflects
+    overlapped-transfer economics: duplication that was too churn-heavy
+    for synchronous migration can win once the transfer rides for free.
     """
     if cfg.moe is None:
         raise ValueError(f"{cfg.name} has no MoE FFN: the paper's technique "
@@ -204,11 +212,14 @@ def run_gps(
                                      scenario=scenario, comm_model=comm_model,
                                      **kw)
 
+    exposed_stall_s = migration_stall_s * (
+        1.0 - min(max(migration_hidden_frac, 0.0), 1.0))
+
     def charge_migration(r: StrategyResult) -> StrategyResult:
-        if migration_stall_s <= 0.0:
+        if exposed_stall_s <= 0.0:
             return r
         lb = _dc.replace(r.latency,
-                         overhead=r.latency.overhead + migration_stall_s)
+                         overhead=r.latency.overhead + exposed_stall_s)
         return _dc.replace(r, latency=lb)
 
     baseline = StrategyResult("none", 0.0, lat(strategy="none"))
@@ -265,6 +276,9 @@ def recommend_strategy(
     ``migration_stall_s`` (kw) — measured replica-migration stall per
     layer-step; duplicating strategies carry it, so heavy plan churn
     tips the verdict toward "none" (see ``run_gps``).
+    ``migration_hidden_frac`` (kw) — the fraction of that stall the
+    engine's overlapped prefetcher measured as hidden under compute;
+    only the exposed remainder is charged.
     """
     report = run_gps(cfg, hw, batch=batch, seq=seq,
                      skew=max(float(skew), 1.0), **kw)

@@ -95,6 +95,35 @@ def slot_expert_map(plan: PlacementPlan, ep_ranks: int,
     return se
 
 
+def store_bytes_per_rank(num_experts: int, ep_ranks: int, dup_slots: int, *,
+                         entry_bytes: int, num_layers: int) -> int:
+    """Device memory one EP rank spends on a persistent replica store:
+    ``L x n_slots`` slot entries. The store is a SECOND copy of the home
+    experts plus the replica slots (the home stacks stay resident for
+    migration sourcing), so this is pure overhead on top of the sharded
+    expert weights."""
+    _, n_slots = plan_dims(num_experts, ep_ranks, dup_slots)
+    return int(num_layers) * n_slots * int(entry_bytes)
+
+
+def clamp_dup_slots(num_experts: int, ep_ranks: int, dup_slots: int, *,
+                    entry_bytes: int, num_layers: int,
+                    hbm_budget_bytes: float) -> int:
+    """Largest ``d <= dup_slots`` whose replica store fits the per-rank
+    HBM budget (``MoEConfig.store_hbm_budget_gb``). 0 disables the clamp.
+    Can return 0 (no replica slots fit — duplication off): the home second
+    copy alone may exhaust the budget, in which case the engine falls back
+    to plain EP rather than over-replicating past device memory."""
+    if hbm_budget_bytes <= 0 or dup_slots <= 0:
+        return dup_slots
+    d = int(dup_slots)
+    while d > 0 and store_bytes_per_rank(
+            num_experts, ep_ranks, d, entry_bytes=entry_bytes,
+            num_layers=num_layers) > hbm_budget_bytes:
+        d -= 1
+    return d
+
+
 def plan_from_assignments(assignments, num_experts: int, ep_ranks: int,
                           dup_slots: int, max_copies: int) -> PlacementPlan:
     """Build a PlacementPlan from a host-side list of extra copies.

@@ -542,10 +542,22 @@ def _logits(params, cfg: ModelConfig, x):
     return dense(params["lm_head"], h)
 
 
+def _migration_view(ready_l, plan_l, slot_l, tplan_l, back_l):
+    """Per-layer double-buffer select for overlapped migration: once a
+    layer's staged fill is READY, dispatch reads the back buffer under the
+    target plan row; until then it reads the live (old-plan) pair. A
+    ``lax.cond`` (not ``where``) so the unselected buffer is never
+    materialized — idle steps (ready all-False) cost nothing."""
+    return jax.lax.cond(ready_l,
+                        lambda: (tplan_l, back_l),
+                        lambda: (plan_l, slot_l))
+
+
 def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
             cache=None, cache_len=None, plan=None, predicted_idx=None,
             block_tables=None, last_pos=None, token_weight=None,
-            slot_weights=None):
+            slot_weights=None, slot_weights_back=None, slot_ready=None,
+            target_plan=None):
     """Unified entry. Returns (logits, new_cache, stats_dict).
 
     mode=train:   logits (B, S, V) over the full sequence.
@@ -572,6 +584,20 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
                           from device memory instead of all_gathering a
                           pool every step. Traced, so migration commits
                           (new contents, same shapes) never recompile.
+
+    Overlapped-migration extensions (``MoEConfig.overlap_migration``; all
+    traced, engines pass live==back + all-False ready when no migration is
+    in flight so the jit signature never changes):
+      ``slot_weights_back`` — the in-flight double buffer the
+                          ``LayerStagedExecutor`` is filling toward the
+                          target plan.
+      ``slot_ready``    — (L,) bool per-layer ready-version vector: True
+                          once layer l's staged fill committed.
+      ``target_plan``   — stacked plan the migration is moving toward.
+    Each scanned layer picks (plan_l, slots_l) from the OLD pair until its
+    ready bit flips, then from the target pair — every layer always sees a
+    consistent plan/weights view, so the async path is bit-exact with the
+    synchronous one at every intermediate state.
     """
     enc_out = None
     if cfg.is_encdec and mode != "decode":
@@ -633,9 +659,18 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
         pred = predicted_idx if predicted_idx is not None else rt.predicted_idx
 
         seq_shard = cfg.is_moe and mode != "decode"
+        overlap = (cfg.is_moe and cfg.moe.overlap_migration
+                   and slot_weights is not None
+                   and slot_weights_back is not None
+                   and slot_ready is not None and target_plan is not None
+                   and plan is not None)
 
         def body(h, xs):
-            layer_p, cache_l, plan_l, pred_l, slot_l = xs
+            (layer_p, cache_l, plan_l, pred_l, slot_l, back_l, ready_l,
+             tplan_l) = xs
+            if overlap:
+                plan_l, slot_l = _migration_view(ready_l, plan_l, slot_l,
+                                                 tplan_l, back_l)
             h = constrain_acts(h, rt, seq_shard)
             h, new_c, st = _attn_layer(
                 layer_p, cfg, h, positions, rt, cache=cache_l,
@@ -648,7 +683,10 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
         xs = (params["layers"], cache,
               plan if plan is not None else _none_stack(L),
               pred if pred is not None else _none_stack(L),
-              slot_weights if slot_weights is not None else _none_stack(L))
+              slot_weights if slot_weights is not None else _none_stack(L),
+              slot_weights_back if overlap else _none_stack(L),
+              slot_ready if overlap else _none_stack(L),
+              target_plan if overlap else _none_stack(L))
         x, (new_cache, layer_stats) = jax.lax.scan(body, x, xs)
         if cfg.is_moe:
             counts, slots, aux, z, dropped = layer_stats

@@ -222,6 +222,13 @@ def analytic_hbm_bytes(cfg, shape, chips: int, *, act_coeff: float = 10.0
     Coefficients are deliberately simple and documented:
       * weights: each device reads its resident shard once per step
         (train: + grad write + fp32 Adam moments read+write).
+      * duplication: with ``duplication_slots > 0`` the persistent replica
+        store (a second copy of the home experts plus the replica slots,
+        ``repro.runtime.ReplicaStore``) adds one read of the extra slot
+        entries per MoE layer per step — the memory-side price of serving
+        without a per-step weight collective. ``MoEConfig.
+        store_hbm_budget_gb`` caps the slots this term may grow to
+        (``core.placement.clamp_dup_slots``).
       * activations: ~act_coeff residency round-trips per layer
         (norms, attention in/out, FFN in/out, residuals).
       * decode: full KV-cache shard read per step (the decode bottleneck).
@@ -229,6 +236,12 @@ def analytic_hbm_bytes(cfg, shape, chips: int, *, act_coeff: float = 10.0
     B = 2  # bf16
     params = cfg.num_params()
     w = params * B / chips
+    if (cfg.moe is not None and cfg.moe.duplication_slots > 0
+            and shape.kind != "train"):
+        e = cfg.moe
+        ff_mult = 3 if cfg.activation == "swiglu" else 2
+        expert_bytes = ff_mult * cfg.d_model * e.d_ff_expert * B
+        w += e.duplication_slots * expert_bytes * cfg.num_layers
     if shape.kind == "train":
         # fwd read + bwd read + grad write (bf16) + moments r/w (fp32 x2 x2)
         w = params * (4 * 3 + 2 * 2 + 4 * 4) / chips / 2  # fp32 params

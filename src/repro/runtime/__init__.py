@@ -17,19 +17,28 @@ weight movement only when the plan actually changes:
                           double-buffered so engines keep serving on the
                           old plan until the swap commits (zero
                           recompiles).
-  ``cost``              — bytes-moved / stall model fed into the GPS
-                          guideline and the online controller hysteresis.
+  ``LayerStagedExecutor``— the async-prefetch variant: fills in layer
+                          order and exposes a per-layer ready vector so
+                          the forward pass adopts each layer the moment
+                          its fill lands (transfer hidden under compute).
+  ``cost``              — bytes-moved / stall model (now with a
+                          hidden-vs-exposed overlap split) fed into the
+                          GPS guideline and the controller hysteresis.
 """
 
 from repro.runtime.cost import (entry_bytes, migration_stall_s,
-                                plan_migration_bytes, should_migrate)
-from repro.runtime.diff import PlanDiff, apply_diff, plan_diff, stacked_slot_experts
-from repro.runtime.migrate import MigrationExecutor, make_migrate_step, migrate_all
+                                overlap_chunk_budget, plan_migration_bytes,
+                                should_migrate, split_hidden_exposed)
+from repro.runtime.diff import (PlanDiff, apply_diff, plan_diff, plans_equal,
+                                stacked_slot_experts)
+from repro.runtime.migrate import (LayerStagedExecutor, MigrationExecutor,
+                                   make_migrate_step, migrate_all)
 from repro.runtime.store import ReplicaStore
 
 __all__ = [
-    "MigrationExecutor", "PlanDiff", "ReplicaStore", "apply_diff",
-    "entry_bytes", "make_migrate_step", "migrate_all", "migration_stall_s",
-    "plan_diff", "plan_migration_bytes", "should_migrate",
-    "stacked_slot_experts",
+    "LayerStagedExecutor", "MigrationExecutor", "PlanDiff", "ReplicaStore",
+    "apply_diff", "entry_bytes", "make_migrate_step", "migrate_all",
+    "migration_stall_s", "overlap_chunk_budget", "plan_diff",
+    "plan_migration_bytes", "plans_equal", "should_migrate",
+    "split_hidden_exposed", "stacked_slot_experts",
 ]

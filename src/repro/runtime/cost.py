@@ -1,17 +1,25 @@
 """Migration cost model: bytes moved per plan switch and the stall they
 cost on the deployment's interconnect (the roofline's collective term).
 
-Two consumers:
+Three consumers:
 
 * ``core.gps.run_gps`` — an amortized per-layer-per-step migration stall
   is added to the *duplicating* strategies' overhead, so the guideline
   rejects a strategy whose plan churn costs more than its balance gain.
+  With overlapped (async-prefetch) migration only the EXPOSED fraction of
+  the stall is charged (``migration_hidden_frac``).
 * the serving engines — ``should_migrate`` gates an individual re-plan:
-  serving stays on the old plan when the predicted stall exceeds the
-  predicted imbalance gain until the next re-plan.
+  serving stays on the old plan when the predicted *exposed* stall exceeds
+  the predicted imbalance gain until the next re-plan. The hidden portion
+  (transfer time overlapped with forward compute) is free by construction.
+* the overlap scheduler — ``overlap_chunk_budget`` converts the measured
+  non-migration step time (the overlap window) into a per-step chunk
+  budget, replacing the fixed ``migrate_chunks_per_step`` knob.
 """
 
 from __future__ import annotations
+
+from typing import Tuple
 
 import numpy as np
 
@@ -37,9 +45,9 @@ def plan_migration_bytes(diff, weights: dict) -> int:
 
 def migration_stall_s(nbytes: float, hw) -> float:
     """Serialized wire time of a migration on ``hw``
-    (`repro.core.simulator.HardwareConfig`). The executor overlaps chunks
-    with serving steps, so this is the worst-case stall, matching the
-    roofline's collective term bytes / link_bw."""
+    (`repro.core.simulator.HardwareConfig`). With synchronous adoption the
+    whole figure lands between engine steps; with the overlapped executor
+    it is an upper bound split by ``split_hidden_exposed``."""
     return float(nbytes) / max(float(hw.link_bw), 1.0)
 
 
@@ -55,7 +63,42 @@ def amortized_layer_stall_s(window_bytes: float, hw, *, num_layers: int,
     return migration_stall_s(window_bytes, hw) / steps
 
 
-def should_migrate(stall_s: float, gain_s: float) -> bool:
-    """Accept a re-plan iff the one-off migration stall is repaid by the
-    predicted imbalance gain accrued before the next re-plan."""
-    return float(stall_s) <= float(gain_s)
+# ---------------------------------------------------------------------------
+# overlap scheduling (async predicted-hot prefetch)
+# ---------------------------------------------------------------------------
+
+def overlap_chunk_budget(window_s: float, *, chunk_entries: int,
+                         entry_bytes: int, hw, min_chunks: int = 1,
+                         max_chunks: int = 1024) -> int:
+    """Chunk-steps per engine iteration that fit inside one step's compute
+    window (the measured non-migration step time). The wire time of one
+    fixed-shape chunk is ``chunk_entries * entry_bytes / link_bw``; issuing
+    at most ``window / chunk_wire`` chunks per step keeps the transfer
+    inside the forward's shadow. At least ``min_chunks`` per step so a
+    migration always drains even when the window estimate collapses."""
+    wire = migration_stall_s(max(int(chunk_entries), 1)
+                             * max(int(entry_bytes), 1), hw)
+    if wire <= 0.0:
+        return int(max_chunks)
+    budget = int(max(float(window_s), 0.0) / wire)
+    return int(np.clip(budget, min_chunks, max_chunks))
+
+
+def split_hidden_exposed(stall_s: float, window_s: float
+                         ) -> Tuple[float, float]:
+    """Split a migration stall into the portion HIDDEN under an overlap
+    window (transfer concurrent with forward compute) and the EXPOSED
+    remainder that still lands on the serving critical path. Returns
+    ``(hidden_s, exposed_s)`` with ``hidden + exposed == stall``."""
+    stall = max(float(stall_s), 0.0)
+    hidden = min(stall, max(float(window_s), 0.0))
+    return hidden, stall - hidden
+
+
+def should_migrate(stall_s: float, gain_s: float,
+                   hidden_s: float = 0.0) -> bool:
+    """Accept a re-plan iff the EXPOSED migration stall (total minus the
+    portion hidden under forward compute) is repaid by the predicted
+    imbalance gain accrued before the next re-plan."""
+    exposed = max(float(stall_s) - max(float(hidden_s), 0.0), 0.0)
+    return exposed <= float(gain_s)

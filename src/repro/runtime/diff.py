@@ -67,6 +67,20 @@ def plan_diff(old_stack: PlacementPlan, new_stack: PlacementPlan,
                     target_slot_experts=se_new)
 
 
+def plans_equal(a: PlacementPlan, b: PlacementPlan) -> bool:
+    """True iff two stacked plans are identical in EVERY array (slot map
+    AND replica counts/tables — two plans can share a slot map yet split
+    tokens differently). The prefetch controller uses this to detect a
+    misprediction: a pre-begun migration whose target differs from the
+    boundary re-plan is cancelled, not committed."""
+    if (a is None) != (b is None):
+        return False
+    if a is None:
+        return True
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
 def apply_diff(se_old: np.ndarray, diff: PlanDiff) -> np.ndarray:
     """Apply a diff to an (L, S) slot map (the host-side model of what the
     MigrationExecutor does to the device buffers)."""

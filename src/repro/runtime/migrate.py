@@ -13,6 +13,15 @@ compile-count checks.
 buffers (double-buffering is free: jax arrays are immutable) under a
 per-engine-step chunk budget; the engine keeps serving on the old plan +
 old store until ``tick`` reports the commit payload.
+
+``LayerStagedExecutor`` is the async-prefetch variant: it sorts the diff
+by LAYER and tracks a per-layer ready-version vector. Because the forward
+pass scans layers in order, a layer whose fill already completed can be
+consumed from the back buffer (with the target plan row) while later
+layers are still in flight — ``forward(..., slot_weights_back, slot_ready,
+target_plan)`` selects per layer, so dispatch reads old-plan slots until
+the fill for that layer commits and the result is bit-exact with the
+synchronous path at every intermediate state.
 """
 
 from __future__ import annotations
@@ -128,25 +137,89 @@ class MigrationExecutor:
         self._cursor += n
         return n
 
-    def tick(self) -> Tuple[Optional[tuple], int]:
-        """Run up to the per-step chunk budget. Returns
+    def tick(self, budget: Optional[int] = None) -> Tuple[Optional[tuple], int]:
+        """Run up to the per-step chunk budget (``budget`` overrides the
+        constructor's ``chunks_per_tick`` — the overlap scheduler passes a
+        compute-time-aware figure per step). Returns
         ``(commit, bytes_moved)`` — ``commit`` is
         ``(weights, target_plan, target_slot_experts)`` once the fill
         completes (the engine swaps plan + store atomically), else None."""
         if not self.active:
             return None, 0
+        cap = self.chunks_per_tick if budget is None else int(budget)
         moved = 0
         chunks = 0
         while self._cursor < self._diff.num_entries:
             moved += self._run_chunk()
             chunks += 1
-            if self.chunks_per_tick and chunks >= self.chunks_per_tick:
+            if cap and chunks >= cap:
                 break
         if self._cursor < self._diff.num_entries:
             return None, moved * self.entry_bytes
         commit = (self._back, self._target_plan, self._target_se)
         self.cancel()
         return commit, moved * self.entry_bytes
+
+
+class LayerStagedExecutor(MigrationExecutor):
+    """Layer-ordered chunked fill with a per-layer ready-version vector.
+
+    Entries are filled in forward-scan order, so at any point the back
+    buffer holds the COMPLETE target contents for a prefix of layers.
+    ``ready_mask()`` reports which layers those are; the engine threads it
+    (with the back buffer and target plan) into ``forward``, whose
+    per-layer select adopts each layer the moment its fill lands — the
+    transfer rides under the compute of the layers still being served on
+    the old plan. Layers whose diff is empty are ready immediately: every
+    live slot already holds the target expert, so adopting the target
+    plan row there moves no weights.
+    """
+
+    def __init__(self, step_fn, experts: Dict[str, jnp.ndarray],
+                 entry_bytes: int, *, num_layers: int, chunk: int = 8,
+                 chunks_per_tick: int = 0):
+        super().__init__(step_fn, experts, entry_bytes, chunk=chunk,
+                         chunks_per_tick=chunks_per_tick)
+        self.num_layers = int(num_layers)
+        self._layer_end: Optional[np.ndarray] = None   # (L,) cum entry count
+
+    def begin(self, weights: Dict[str, jnp.ndarray], diff: PlanDiff,
+              target_plan: PlacementPlan) -> None:
+        order = np.argsort(np.asarray(diff.layer), kind="stable")
+        staged = PlanDiff(layer=np.asarray(diff.layer)[order],
+                          dst_slot=np.asarray(diff.dst_slot)[order],
+                          src_expert=np.asarray(diff.src_expert)[order],
+                          target_slot_experts=diff.target_slot_experts)
+        super().begin(weights, staged, target_plan)
+        counts = np.bincount(staged.layer, minlength=self.num_layers)
+        self._layer_end = np.cumsum(counts)
+
+    def cancel(self) -> None:
+        super().cancel()
+        self._layer_end = None
+
+    def ready_mask(self) -> np.ndarray:
+        """(L,) bool: layers whose back-buffer fill is complete (safe to
+        dispatch from the back buffer under the target plan). All-False
+        when idle — the engine's select then reads the live pair."""
+        if not self.active or self._layer_end is None:
+            return np.zeros((self.num_layers,), bool)
+        return self._layer_end <= self._cursor
+
+    @property
+    def back_weights(self) -> Optional[Dict[str, jnp.ndarray]]:
+        """The in-flight double buffer (None when idle)."""
+        return self._back
+
+    @property
+    def target_plan(self) -> Optional[PlacementPlan]:
+        return self._target_plan
+
+    @property
+    def remaining_entries(self) -> int:
+        if not self.active:
+            return 0
+        return self._diff.num_entries - self._cursor
 
 
 def migrate_all(step_fn, weights: Dict[str, jnp.ndarray], experts: Dict,

@@ -85,3 +85,14 @@ class ReplicaStore:
     @property
     def entry_bytes(self) -> int:
         return _cost.entry_bytes(self.weights)
+
+    @property
+    def hbm_bytes_per_rank(self) -> int:
+        """Device memory one EP rank spends on its store shard: L layers x
+        n_slots local slot entries (home second copy + replica slots) —
+        the figure the ``store_hbm_budget_gb`` clamp and the roofline's
+        duplication memory term account for."""
+        L = int(self.slot_experts.shape[0])
+        _, n_slots = plan_dims(self.num_experts, self.ep_ranks,
+                               self.dup_slots)
+        return L * n_slots * self.entry_bytes

@@ -75,6 +75,7 @@ class Decision:
     predict_interval: int
     switched: bool
     migration_stall_s: float = 0.0  # per-layer-step stall charged this tick
+    migration_hidden_frac: float = 0.0  # window fraction hidden by overlap
     report: Optional[GPSReport] = field(default=None, repr=False)
 
 
@@ -98,16 +99,23 @@ class OnlineGPSController:
         self._pending: Optional[str] = None
         self._pending_votes = 0
         self._migration_bytes = 0.0
+        self._migration_hidden_bytes = 0.0
 
     # ------------------------------------------------------------- observe
     def observe(self, counts: Optional[np.ndarray], now: float,
-                migration_bytes: float = 0.0) -> Optional[Decision]:
+                migration_bytes: float = 0.0,
+                migration_hidden_bytes: float = 0.0) -> Optional[Decision]:
         """Feed one iteration's (L, E) expert histogram (None for MoE-less
         iterations) plus the replica-weight bytes the engine's migration
-        executor moved this iteration. Returns a Decision when a window
-        closes, else None."""
+        executor moved this iteration. ``migration_hidden_bytes`` is the
+        share of those bytes whose transfer the overlapped prefetcher hid
+        under forward compute — only the exposed remainder is charged to
+        duplicating strategies. Returns a Decision when a window closes,
+        else None."""
         self._iters += 1
         self._migration_bytes += float(migration_bytes)
+        self._migration_hidden_bytes += min(float(migration_hidden_bytes),
+                                            float(migration_bytes))
         if counts is not None:
             c = np.asarray(counts, np.float64)
             self._counts = c if self._counts is None else self._counts + c
@@ -117,6 +125,7 @@ class OnlineGPSController:
         self._iters = 0
         self._counts = None
         self._migration_bytes = 0.0
+        self._migration_hidden_bytes = 0.0
         return decision
 
     # ------------------------------------------------------------ evaluate
@@ -146,10 +155,16 @@ class OnlineGPSController:
         vol = self._volatility()
 
         mig_stall = 0.0
+        hidden_frac = 0.0
         if self.cfg.migration_aware and self._migration_bytes > 0:
             from repro.runtime.cost import amortized_layer_stall_s
+            hidden_frac = min(
+                self._migration_hidden_bytes / self._migration_bytes, 1.0)
+            # charge only the EXPOSED traffic (overlapped fills ride under
+            # forward compute and cost the serving path nothing)
             mig_stall = amortized_layer_stall_s(
-                self._migration_bytes * self.cfg.migration_bytes_scale,
+                (self._migration_bytes - self._migration_hidden_bytes)
+                * self.cfg.migration_bytes_scale,
                 self.cfg.hardware, num_layers=self.model_cfg.num_layers,
                 window_steps=self.cfg.window_iters)
 
@@ -183,7 +198,7 @@ class OnlineGPSController:
                      recommended=recommended, strategy=self.strategy,
                      predict_interval=self.predict_interval,
                      switched=switched, migration_stall_s=mig_stall,
-                     report=report)
+                     migration_hidden_frac=hidden_frac, report=report)
         self.decisions.append(d)
         return d
 

@@ -49,6 +49,63 @@ class _nullcontext:
         return False
 
 
+def _clamp_store_dup_slots(cfg: ModelConfig, params, ep_ranks: int,
+                           dup_slots: int) -> int:
+    """Store-aware memory clamp shared by both engines: shrink the
+    requested replica slots until the persistent store (a second copy of
+    the home experts plus the replica slots) fits the per-rank HBM budget
+    (``MoEConfig.store_hbm_budget_gb``; 0 = unlimited). Callers gate on
+    store mode + a mesh — meshless engines never build a store."""
+    if not (cfg.is_moe and dup_slots > 0
+            and cfg.moe.replica_impl == "store"
+            and cfg.moe.store_hbm_budget_gb > 0):
+        return dup_slots
+    from repro.core.placement import clamp_dup_slots
+    from repro.runtime.cost import entry_bytes as _eb
+    return clamp_dup_slots(
+        cfg.moe.num_experts, ep_ranks, dup_slots,
+        entry_bytes=_eb(params["layers"]["moe"]["experts"]),
+        num_layers=cfg.num_layers,
+        hbm_budget_bytes=cfg.moe.store_hbm_budget_gb * 1e9)
+
+
+def _chunk_stall_split(moved_bytes: float, window_s: float, hw,
+                       overlap: bool):
+    """(hidden_s, exposed_s) of one tick's modeled wire time: overlapped
+    fills hide up to one window of transfer under forward compute,
+    synchronous fills expose everything."""
+    from repro.runtime import cost as _c
+    stall = _c.migration_stall_s(moved_bytes, hw)
+    if not overlap:
+        return 0.0, stall
+    return _c.split_hidden_exposed(stall, window_s)
+
+
+class _OverlapStoreMixin:
+    """Overlapped-migration plumbing shared by ServeEngine and
+    ContinuousEngine. Expects ``_store``, ``_executor``, ``_idle_ready``,
+    ``cfg``, ``_current_plan()`` on the engine; engines define
+    ``_overlap_active()``."""
+
+    def _overlap_active(self) -> bool:
+        raise NotImplementedError
+
+    def _overlap_args(self):
+        """(slot_weights_back, slot_ready, target_plan) threaded into the
+        step fns. Idle steps pass live==back + all-False ready, so the
+        jit signature (and hence the compiled program set) is identical
+        whether or not a migration is in flight."""
+        if self._store is None or not self._overlap_active():
+            return None, None, None
+        if self._executor is not None and self._executor.active:
+            return (self._executor.back_weights,
+                    jnp.asarray(self._executor.ready_mask()),
+                    self._executor.target_plan)
+        if self._idle_ready is None:
+            self._idle_ready = jnp.zeros((self.cfg.num_layers,), bool)
+        return self._store.weights, self._idle_ready, self._current_plan()
+
+
 # ---------------------------------------------------------------------------
 # XLA compile counting — the no-recompile guarantee under a mesh.
 #
@@ -88,9 +145,12 @@ class ServeConfig:
     max_len: int = 2048               # KV-cache length for generation
     in_graph_replan: bool = False     # fuse Algorithm 1 into the prefill
                                       # step (no host round-trip per batch)
+    migrate_chunk: int = 8            # slot entries per fixed-shape fill step
+                                      # (store mode; overlap follows
+                                      # MoEConfig.overlap_migration)
 
 
-class ServeEngine:
+class ServeEngine(_OverlapStoreMixin):
     """Batched prefill+decode with dynamic expert duplication."""
 
     def __init__(self, cfg: ModelConfig, params, serve: ServeConfig,
@@ -106,10 +166,20 @@ class ServeEngine:
         self.history: List[Dict] = []         # per-batch balance telemetry
         self._store = None                    # repro.runtime.ReplicaStore
         self._migrate_fn = None
+        self._executor = None                 # LayerStagedExecutor (overlap)
+        self._idle_ready = None               # cached all-False ready mask
+        self._recent_step_s = 0.0             # EMA, feeds the overlap budget
+        self._step_moved = False              # this call issued fill chunks
+        self._window_seeded = False           # first sample (compile) skipped
+        self._adopt_ticks = 0
         self._last_migration: Dict = {}
 
         use_dup = cfg.is_moe and serve.strategy != "none"
         dup_slots = serve.dup_slots if use_dup else 0
+        if mesh is not None:
+            dup_slots = _clamp_store_dup_slots(cfg, params, ep_ranks,
+                                               dup_slots)
+            use_dup = use_dup and dup_slots > 0
         if cfg.is_moe:
             self.moe_cfg = dataclasses.replace(
                 cfg.moe, duplication_slots=dup_slots,
@@ -161,11 +231,16 @@ class ServeEngine:
                 and self.moe_cfg.replica_impl == "store"
                 and not self.serve.in_graph_replan)
 
+    @property
+    def _overlap_on(self) -> bool:
+        return self._store_mode and self.moe_cfg.overlap_migration
+
     def _slot_weights_arg(self):
         if not self._store_mode:
             return None
         if self._store is None:
-            from repro.runtime import ReplicaStore, make_migrate_step
+            from repro.runtime import (LayerStagedExecutor, ReplicaStore,
+                                       make_migrate_step)
             m = self.moe_cfg
             experts = self.params["layers"]["moe"]["experts"]
             self._store = ReplicaStore.from_params(
@@ -175,25 +250,83 @@ class ServeEngine:
             self._migrate_fn = make_migrate_step(
                 self.mesh, num_experts=m.num_experts, ep_ranks=self.ep_ranks,
                 dup_slots=m.duplication_slots)
+            if self._overlap_on:
+                self._executor = LayerStagedExecutor(
+                    self._migrate_fn, experts, self._store.entry_bytes,
+                    num_layers=self.cfg.num_layers,
+                    chunk=self.serve.migrate_chunk)
         return self._store.weights
+
+    def _overlap_active(self) -> bool:
+        return self._overlap_on
+
+    def _hw(self):
+        from repro.core.simulator import A100_PCIE
+        return A100_PCIE
+
+    def _tick_migration(self):
+        """Issue this step's overlapped chunk budget (async dispatch — the
+        fills queue behind / alongside the forward programs instead of
+        stalling between batches); swap plan + store on commit."""
+        if self._executor is None or not self._executor.active:
+            return
+        from repro.runtime import cost as _c
+        window = self._recent_step_s
+        budget = _c.overlap_chunk_budget(
+            window, chunk_entries=self._executor.chunk,
+            entry_bytes=self._store.entry_bytes, hw=self._hw())
+        ctx = self.mesh or _nullcontext()
+        with ctx:
+            commit, moved = self._executor.tick(budget)
+        self._adopt_ticks += 1
+        if moved:
+            self._step_moved = True
+            hidden, exposed = _chunk_stall_split(moved, window, self._hw(),
+                                                 overlap=True)
+            m = self._last_migration
+            m["moved_bytes"] = m.get("moved_bytes", 0.0) + moved
+            m["hidden_s"] = m.get("hidden_s", 0.0) + hidden
+            m["exposed_s"] = m.get("exposed_s", 0.0) + exposed
+        if commit is not None:
+            weights, plan, se = commit
+            self._store.adopt(weights, se)
+            self._plan_stack = plan
+            self._last_migration["steps_to_adopt"] = self._adopt_ticks
 
     def _adopt_plan(self, target: PlacementPlan) -> PlacementPlan:
         """Pay weight movement once per re-plan: migrate exactly the slots
-        the plan switch changes, then swap (synchronously — this engine
-        re-plans between batches anyway)."""
+        the plan switch changes. Synchronous drain-and-swap when
+        ``overlap_migration`` is off (this engine re-plans between batches
+        anyway); with overlap on, a layer-staged fill is begun instead and
+        rides under the following prefill/decode steps — serving reads
+        old-plan slots per layer until each layer's fill commits."""
         if not self._store_mode or self._store is None:
             return target
-        from repro.runtime import migrate_all, plan_diff
+        from repro.runtime import migrate_all, plan_diff, plans_equal
+        if (self._overlap_on and self._executor.active
+                and plans_equal(self._executor.target_plan, target)):
+            # the re-plan reproduced the in-flight target (stable traffic
+            # quantizes to the same plan every interval): keep filling —
+            # restarting would zero the cursor every batch and a diff
+            # larger than one interval's budget would never commit
+            return self._current_plan()
         m = self.moe_cfg
         diff = plan_diff(self._current_plan(), target, self.ep_ranks,
                          m.duplication_slots)
         moved = diff.num_entries * self._store.entry_bytes
-        if diff.num_entries:
-            weights = migrate_all(
-                self._migrate_fn, self._store.weights,
-                self.params["layers"]["moe"]["experts"], diff)
-            self._store.adopt(weights, diff.target_slot_experts)
         self._last_migration = {"entries": diff.num_entries, "bytes": moved}
+        if diff.num_entries == 0:
+            if self._executor is not None:
+                self._executor.cancel()
+            return target
+        if self._overlap_on:
+            self._executor.begin(self._store.weights, diff, target)
+            self._adopt_ticks = 0
+            return self._current_plan()     # old plan until commits land
+        weights = migrate_all(
+            self._migrate_fn, self._store.weights,
+            self.params["layers"]["moe"]["experts"], diff)
+        self._store.adopt(weights, diff.target_slot_experts)
         return target
 
     def _current_plan(self) -> Optional[PlacementPlan]:
@@ -231,13 +364,23 @@ class ServeEngine:
 
     # ----------------------------------------------------------------- steps
     def prefill(self, batch: Dict, cache=None):
+        import time as _time
+        t0 = _time.perf_counter()
         tokens = batch["tokens"]
         B, S = tokens.shape
         pred = self._predict_tokens(tokens)
         prefill_step, _ = self._steps()
         if cache is None:
             cache = init_cache(self.cfg, self._runtime(), B, self.serve.max_len)
+        self._slot_weights_arg()     # materialize store + executor lazily
+        self._step_moved = False
+        self._tick_migration()       # overlapped fills ride this step
+        # read plan AND weights only after the tick: a commit swaps both
+        # atomically, and a (new plan, pre-commit weights) mix would serve
+        # replica slots holding the wrong expert
+        slot_w = self._slot_weights_arg()
         plan = self._current_plan()
+        back_w, ready, tplan = self._overlap_args()
         ctx = self.mesh or _nullcontext()
         with ctx:
             if getattr(self, "_in_graph", False):
@@ -246,21 +389,43 @@ class ServeEngine:
                 self._plan_stack = next_plan
             else:
                 logits, cache, stats = prefill_step(
-                    self.params, batch, cache, plan, pred,
-                    self._slot_weights_arg())
+                    self.params, batch, cache, plan, pred, slot_w,
+                    back_w, ready, tplan)
         self._observe(stats, num_tokens=B * S,
                       skip_replan=getattr(self, "_in_graph", False))
+        self._note_step_time(_time.perf_counter() - t0)
         return logits, cache, stats
 
     def decode(self, tokens, cache, cache_len: int):
         _, decode_step = self._steps()
+        self._slot_weights_arg()     # materialize store + executor lazily
+        self._step_moved = False
+        self._tick_migration()
+        slot_w = self._slot_weights_arg()    # post-commit view (see prefill)
         plan = self._current_plan()
+        back_w, ready, tplan = self._overlap_args()
         ctx = self.mesh or _nullcontext()
         with ctx:
             next_tok, logits, cache, stats = decode_step(
-                self.params, tokens, cache, cache_len, plan,
-                self._slot_weights_arg())
+                self.params, tokens, cache, cache_len, plan, slot_w,
+                back_w, ready, tplan)
         return next_tok, logits, cache, stats
+
+    def _note_step_time(self, dt: float):
+        """EMA of the MIGRATION-FREE prefill wall time — the overlap
+        window the chunk budget is sized against. Only prefill feeds it:
+        decode compiles a fresh program per static ``cache_len``, so its
+        walls are compile-dominated and would inflate the window by
+        orders of magnitude. Steps that issued fill chunks are excluded
+        too (their wall includes the fills), and the very first sample is
+        discarded (it includes the prefill compile)."""
+        if self._step_moved:
+            return
+        if not self._window_seeded:
+            self._window_seeded = True
+            return
+        self._recent_step_s = (dt if self._recent_step_s <= 0
+                               else 0.9 * self._recent_step_s + 0.1 * dt)
 
     def generate(self, batch: Dict, max_new_tokens: int = 8):
         """Prefill + greedy decode; returns (generated (B, T), telemetry)."""
@@ -333,9 +498,21 @@ class ContinuousConfig:
     # EP on a mesh with dup_slots > 0 and moe.replica_impl == "store")
     migrate_chunk: int = 8            # slot entries per fixed-shape step
     migrate_chunks_per_step: int = 0  # chunk steps per engine iteration
-                                      # (0 = drain the diff at replan time)
-    migration_gate: bool = True       # reject re-plans whose stall exceeds
-                                      # the predicted imbalance gain
+                                      # when overlap is OFF (0 = drain the
+                                      # diff at replan time)
+    migration_gate: bool = True       # reject re-plans whose EXPOSED stall
+                                      # exceeds the predicted imbalance gain
+    # Overlapped (async-prefetch) migration: None inherits
+    # MoEConfig.overlap_migration. When on, the fixed chunks_per_step
+    # budget is replaced by a compute-time-aware schedule (chunks sized to
+    # the measured non-migration step time, runtime.cost), fills are
+    # layer-staged so each layer adopts the moment its fill lands, and the
+    # engine PRE-BEGINS migration toward the predicted next-window plan
+    # ``prefetch_lead`` iterations before the re-plan boundary
+    # (cancel-on-misprediction via MigrationExecutor.cancel).
+    overlap_migration: Optional[bool] = None
+    prefetch_lead: int = 2            # iterations before the boundary to
+                                      # pre-begin (0 = no predictive start)
 
     def __post_init__(self):
         if self.prefill_len % self.block_size:
@@ -356,7 +533,7 @@ class StepEvents:
     decision: Optional[object] = None          # controller Decision, if any
 
 
-class ContinuousEngine:
+class ContinuousEngine(_OverlapStoreMixin):
     """Continuous-batching serving engine over a paged KV block pool.
 
     Each ``step()`` is one mixed iteration: admit + prefill up to
@@ -398,22 +575,31 @@ class ContinuousEngine:
         self._plan_stack: Optional[PlacementPlan] = None
 
         if cfg.is_moe:
+            dup_slots = ccfg.dup_slots
+            if mesh is not None:
+                dup_slots = _clamp_store_dup_slots(cfg, params, ep_ranks,
+                                                   dup_slots)
+            self._overlap = (ccfg.overlap_migration
+                             if ccfg.overlap_migration is not None
+                             else cfg.moe.overlap_migration)
             # duplication slots are ALWAYS compiled in (even for strategy
             # "none", which runs the identity plan) so switching strategy
             # at runtime never changes a shape
             self.moe_cfg = dataclasses.replace(
-                cfg.moe, duplication_slots=ccfg.dup_slots,
-                max_copies=ccfg.max_copies)
+                cfg.moe, duplication_slots=dup_slots,
+                max_copies=ccfg.max_copies,
+                overlap_migration=self._overlap)
             cfg = dataclasses.replace(cfg, moe=self.moe_cfg)
             self.estimator = DistributionEstimator(
                 cfg.num_layers, cfg.moe.num_experts, ema=ccfg.ema)
         else:
             self.moe_cfg = None
             self.estimator = None
+            self._overlap = False
         self.cfg = cfg
         self.params = params
 
-        use_dup = cfg.is_moe and ccfg.dup_slots > 0
+        use_dup = cfg.is_moe and cfg.moe.duplication_slots > 0
         # window_override = max_len disables rotating-window caches: the
         # paged pool is linear in logical positions
         self.rt = Runtime(mesh=mesh, ep=mesh is not None, ep_ranks=ep_ranks,
@@ -439,16 +625,24 @@ class ContinuousEngine:
         self._executor = None
         self._migrate_fn = None
         self._entry_bytes = 0
-        self._recent_step_s = 0.0
+        self._recent_step_s = 0.0          # EMA over ALL steps
+        self._recent_serve_s = 0.0         # EMA over migration-free steps
+                                           # (the overlap window)
         self._step_migration_bytes = 0.0
+        self._step_migration_hidden_bytes = 0.0
+        self._idle_ready = None            # cached all-False ready mask
+        self._adopt_ticks = 0
+        self._prebegun_plan = None         # predictive pre-migration target
+        self._pred_counts = None           # t2e predicted expert histogram
         if cfg.is_moe:
             from repro.runtime import cost as _mig_cost
             self._entry_bytes = _mig_cost.entry_bytes(
                 params["layers"]["moe"]["experts"])
-        if (cfg.is_moe and mesh is not None and ccfg.dup_slots > 0
+        if (cfg.is_moe and mesh is not None
+                and cfg.moe.duplication_slots > 0
                 and cfg.moe.replica_impl == "store"):
-            from repro.runtime import (MigrationExecutor, ReplicaStore,
-                                       make_migrate_step)
+            from repro.runtime import (LayerStagedExecutor, MigrationExecutor,
+                                       ReplicaStore, make_migrate_step)
             m = self.moe_cfg
             experts = params["layers"]["moe"]["experts"]
             self._store = ReplicaStore.from_params(
@@ -457,10 +651,15 @@ class ContinuousEngine:
             self._migrate_fn = make_migrate_step(
                 mesh, num_experts=m.num_experts, ep_ranks=ep_ranks,
                 dup_slots=m.duplication_slots)
-            self._executor = MigrationExecutor(
-                self._migrate_fn, experts, self._store.entry_bytes,
-                chunk=ccfg.migrate_chunk,
-                chunks_per_tick=ccfg.migrate_chunks_per_step)
+            if self._overlap:
+                self._executor = LayerStagedExecutor(
+                    self._migrate_fn, experts, self._store.entry_bytes,
+                    num_layers=cfg.num_layers, chunk=ccfg.migrate_chunk)
+            else:
+                self._executor = MigrationExecutor(
+                    self._migrate_fn, experts, self._store.entry_bytes,
+                    chunk=ccfg.migrate_chunk,
+                    chunks_per_tick=ccfg.migrate_chunks_per_step)
 
     # ------------------------------------------------------------------ plan
     def _identity_stack(self) -> Optional[PlacementPlan]:
@@ -492,19 +691,65 @@ class ContinuousEngine:
         from repro.core.simulator import A100_PCIE
         return self.controller.cfg.hardware if self.controller else A100_PCIE
 
+    def _overlap_window_s(self) -> float:
+        """The overlap window one engine step offers a staged fill: the
+        measured NON-migration step time (EMA over steps that issued no
+        chunks), falling back to the whole-step EMA and then to the
+        profiled per-layer dispatch phase total."""
+        if self._recent_serve_s > 0:
+            return self._recent_serve_s
+        if self._recent_step_s > 0:
+            return self._recent_step_s
+        per_layer = self.metrics.phase_times.get("total", 0.0)
+        return per_layer * self.cfg.num_layers
+
+    def _overlap_budget(self) -> int:
+        from repro.runtime import overlap_chunk_budget
+        return overlap_chunk_budget(
+            self._overlap_window_s(), chunk_entries=self.ccfg.migrate_chunk,
+            entry_bytes=max(self._entry_bytes, 1), hw=self._hw())
+
+    def _overlap_active(self) -> bool:
+        return self._overlap
+
+    def _hidden_estimate(self, stall_s: float, entries: int) -> float:
+        """Predicted hidden share of a migration's stall under the overlap
+        schedule: the fill drains over ``ceil(entries / (chunk * budget))``
+        steps, each hiding up to one overlap window of wire time."""
+        if not self._overlap or entries <= 0:
+            return 0.0
+        window = self._overlap_window_s()
+        per_tick = max(self.ccfg.migrate_chunk * self._overlap_budget(), 1)
+        drain_steps = -(-entries // per_tick)
+        return min(stall_s, drain_steps * window)
+
     def _adopt_plan(self, target):
-        """serve -> diff -> chunked fill -> swap. Without a store the plan
-        swaps immediately (and the diff is still costed, so dispatcherless
-        smoke deployments surface the plan-churn bytes a real EP cluster
-        would pay); with one, only changed slots are filled and serving
-        stays on the OLD plan until the executor commits."""
+        """serve -> diff -> staged fill -> per-layer swap. Without a store
+        the plan swaps immediately (and the diff is still costed, so
+        dispatcherless smoke deployments surface the plan-churn bytes a
+        real EP cluster would pay); with one, only changed slots are
+        filled and each layer keeps serving the OLD plan until its fill
+        commits. A pre-begun predictive migration toward this exact plan
+        just keeps filling; toward a different plan it is cancelled
+        (misprediction) and the fill restarts from the live buffers."""
         if (target is None or self._plan_stack is None
                 or not self.cfg.is_moe
                 or self.moe_cfg.duplication_slots == 0):
             self._plan_stack = target
             return target
-        from repro.runtime import migration_stall_s, plan_diff
+        from repro.runtime import migration_stall_s, plan_diff, plans_equal
         m = self.moe_cfg
+        if (self._executor is not None and self._executor.active
+                and self._prebegun_plan is not None):
+            if plans_equal(target, self._prebegun_plan):
+                # prediction confirmed: the transfer started early and is
+                # (partially) done — the boundary re-plan costs nothing new
+                self._prebegun_plan = None
+                self.metrics.record_migration(replanned=True)
+                return self._plan_stack
+            self._executor.cancel()
+            self._prebegun_plan = None
+            self.metrics.record_migration(cancelled=True)
         diff = plan_diff(self._plan_stack, target, self.ep_ranks,
                          m.duplication_slots)
         planned = diff.num_entries * self._entry_bytes
@@ -517,19 +762,40 @@ class ContinuousEngine:
             # an in-flight migration toward an older target is superseded
             if self._executor is not None:
                 self._executor.cancel()
+            if self._store is None and planned > 0:
+                # model the overlap economics for store-less smoke engines
+                # too, so the controller sees the same hidden/exposed split
+                # a real EP deployment's prefetcher would produce
+                hidden = self._hidden_estimate(stall, diff.num_entries)
+                self.metrics.record_migration(hidden_s=hidden,
+                                              exposed_s=stall - hidden)
+                self._step_migration_bytes += planned
+                if stall > 0:
+                    self._step_migration_hidden_bytes += \
+                        planned * (hidden / stall)
             self._plan_stack = target
             return target
-        if not self._migration_accept(stall, target):
+        if not self._migration_accept(stall, target, diff.num_entries):
+            # a previously ACCEPTED in-flight fill (if any) keeps draining
+            # toward its own target — it already passed the gate. A switch
+            # to "none"/identity never lands here: its diff is empty, so
+            # the branch above cancels any in-flight migration first.
             self.metrics.record_migration(rejected=True)
             return self._plan_stack
         self._executor.begin(self._store.weights, diff, target)
-        if self.ccfg.migrate_chunks_per_step == 0:
+        self._adopt_ticks = 0
+        if not self._overlap and self.ccfg.migrate_chunks_per_step == 0:
             self._tick_migration()              # drain + commit right away
         return self._plan_stack
 
-    def _migration_accept(self, stall_s: float, target) -> bool:
-        """Hysteresis: a re-plan must repay its weight movement with
-        predicted imbalance gain before the next re-plan."""
+    def _migration_accept(self, stall_s: float, target,
+                          entries: int = 0) -> bool:
+        """Hysteresis: a re-plan must repay its EXPOSED weight movement
+        (total stall minus the share the overlap schedule hides under
+        forward compute) with predicted imbalance gain before the next
+        re-plan. With overlap on, re-plans whose transfer rides entirely
+        under compute are accepted even when the same transfer would have
+        been rejected as a synchronous stall."""
         if not self.ccfg.migration_gate or self._recent_step_s <= 0:
             return True
         from repro.runtime import should_migrate
@@ -541,22 +807,36 @@ class ContinuousEngine:
                                         m.duplication_slots))
         gain_frac = max(old - new, 0.0) / max(old, 1e-9)
         gain_s = gain_frac * max(self.predict_interval, 1) * self._recent_step_s
-        return should_migrate(stall_s, gain_s)
+        return should_migrate(stall_s, gain_s,
+                              hidden_s=self._hidden_estimate(stall_s, entries))
 
     def _tick_migration(self):
-        """Run the per-step migration budget; swap plan + store on commit."""
+        """Issue this step's migration budget (compute-time-aware when
+        overlapped, the fixed chunks_per_step knob otherwise); swap plan +
+        store on commit. Chunk programs are enqueued WITHOUT blocking, so
+        on an async backend they execute under the forward compute of the
+        iteration that follows."""
         if self._executor is None or not self._executor.active:
             return
+        budget = self._overlap_budget() if self._overlap else None
         with self.mesh:          # same lowering context as warmup's compile
-            commit, moved = self._executor.tick()
+            commit, moved = self._executor.tick(budget)
+        self._adopt_ticks += 1
         if moved:
-            # the stall was already costed at replan time (planned bytes)
             self._step_migration_bytes += moved
-            self.metrics.record_migration(bytes_moved=moved)
+            hidden, exposed = _chunk_stall_split(
+                moved, self._overlap_window_s(), self._hw(),
+                overlap=self._overlap)
+            stall = hidden + exposed
+            if stall > 0:
+                self._step_migration_hidden_bytes += moved * (hidden / stall)
+            self.metrics.record_migration(bytes_moved=moved, hidden_s=hidden,
+                                          exposed_s=exposed)
         if commit is not None:
             weights, plan, se = commit
             self._store.adopt(weights, se)
             self._plan_stack = plan
+            self._prebegun_plan = None
             self.metrics.record_migration(committed=True)
 
     # --------------------------------------------------------------- predict
@@ -565,13 +845,79 @@ class ContinuousEngine:
         prediction broadcast over k). One definition site: warmup and
         serving MUST build the identical jit signature."""
         pred = self.predictor.predict(np.asarray(tokens))          # (L, 1, S)
+        self._last_token_pred = pred
         K = self.moe_cfg.top_k
         return jnp.asarray(pred)[..., None].repeat(K, -1)
 
     def _predict_tokens(self, tokens: np.ndarray):
         if self.strategy != "token_to_expert" or self.predictor is None:
             return None
-        return self._shape_predictions(tokens)
+        out = self._shape_predictions(tokens)
+        self._note_predicted(self._last_token_pred)
+        return out
+
+    def _note_predicted(self, pred: np.ndarray):
+        """Publish the Token-to-Expert predictor's output as a predicted
+        next-window expert histogram — available BEFORE dispatch, so the
+        prefetch controller can pre-begin migration toward the plan the
+        next re-plan will most likely produce."""
+        E = self.moe_cfg.num_experts
+        L = self.cfg.num_layers
+        ids = np.clip(np.asarray(pred).reshape(L, -1), 0, E - 1)
+        hist = np.stack([np.bincount(ids[l], minlength=E)
+                         for l in range(L)]).astype(np.float64)
+        if self._pred_counts is None:
+            self._pred_counts = hist
+        else:
+            e = self.ccfg.ema
+            self._pred_counts = e * self._pred_counts + (1 - e) * hist
+
+    def _predicted_dist(self) -> Optional[np.ndarray]:
+        """(L, E) next-window hot-expert distribution, published EARLY:
+        the Token-to-Expert predictor's aggregated output when that
+        strategy runs, else the Distribution-Only estimator (whose EMA
+        state is exactly what the boundary re-plan will consume)."""
+        if not self.cfg.is_moe:
+            return None
+        if self.strategy == "token_to_expert" and self._pred_counts is not None:
+            tot = np.maximum(self._pred_counts.sum(axis=1, keepdims=True),
+                             1e-9)
+            return self._pred_counts / tot
+        return self.estimator.predict()
+
+    def _prebegin_migration(self):
+        """Start filling replica slots toward the PREDICTED next-window
+        plan while the current window is still serving — by the re-plan
+        boundary the transfer has ridden under ``prefetch_lead`` steps of
+        forward compute. A boundary plan that differs cancels the stale
+        fill (the live buffers were never touched)."""
+        if self._store is None or self._executor is None:
+            return
+        from repro.runtime import migration_stall_s, plan_diff
+        m = self.moe_cfg
+        dist = self._predicted_dist()
+        if dist is None:
+            return
+        target = stack_plans([
+            duplicate_experts_host(dist[l], self.ep_ranks,
+                                   m.duplication_slots, m.max_copies).plan
+            for l in range(self.cfg.num_layers)])
+        diff = plan_diff(self._plan_stack, target, self.ep_ranks,
+                         m.duplication_slots)
+        if diff.num_entries == 0:
+            return
+        planned = diff.num_entries * self._entry_bytes
+        stall = migration_stall_s(planned, self._hw())
+        if not self._migration_accept(stall, target, diff.num_entries):
+            return
+        self._executor.begin(self._store.weights, diff, target)
+        self._prebegun_plan = target
+        self._adopt_ticks = 0
+        # the diff cost is accounted HERE (the boundary re-plan that
+        # confirms the prediction records only the replan event, so
+        # planned-vs-moved stays comparable for prebegun migrations)
+        self.metrics.record_migration(prebegun=True, planned_bytes=planned,
+                                      stall_s=stall)
 
     # ---------------------------------------------------------------- warmup
     def warmup(self):
@@ -591,6 +937,7 @@ class ContinuousEngine:
         slot_w = self._store.weights if self._store is not None else None
         ctx = self.mesh or _nullcontext()
         with ctx:
+            back_w, ready, tplan = self._overlap_args()
             if self._migrate_fn is not None:
                 # compile the migration step once (a no-op chunk: every
                 # entry invalid) so later plan switches never compile
@@ -603,7 +950,7 @@ class ContinuousEngine:
                 _, _, temp, _ = jax.block_until_ready(self._prefill_fn(
                     self.params, {"tokens": jnp.asarray(toks)},
                     self._temp_cache, plan, pred, last, jnp.asarray(tw),
-                    slot_w))
+                    slot_w, back_w, ready, tplan))
             dec_toks = jnp.zeros((ccfg.max_slots, 1), jnp.int32)
             tables = jnp.zeros(
                 (ccfg.max_slots, self.scheduler.tables.max_blocks_per_slot),
@@ -617,7 +964,8 @@ class ContinuousEngine:
                 self.pool = jax.block_until_ready(
                     self._write_fn(self.pool, temp, table))
                 out = self._decode_fn(self.params, dec_toks, self.pool,
-                                      tables, lens, plan, aw, slot_w)
+                                      tables, lens, plan, aw, slot_w,
+                                      back_w, ready, tplan)
                 self.pool = jax.block_until_ready(out[2])
             if self.mesh is not None:
                 self._warm_converts()
@@ -631,9 +979,12 @@ class ContinuousEngine:
                                     # but the plan-build programs compile
                 while self._executor is not None and self._executor.active:
                     self._tick_migration()      # never leak a warmup fill
-                # warmup's replan must not count as serving plan churn
+                # warmup's replan must not count as serving plan churn,
+                # and its garbage-token predictions must not seed the
+                # prefetcher's published histogram
                 self.metrics.migration = dict.fromkeys(
                     self.metrics.migration, 0.0)
+                self._pred_counts = None
         self._warm = True
         self._compile_baseline = self.compile_counts()
 
@@ -652,6 +1003,9 @@ class ContinuousEngine:
             jnp.asarray(np.zeros((ccfg.max_slots, 1), np.float32)),
             jnp.asarray(np.zeros((1, ccfg.prefill_len), np.float32)),
             jnp.asarray(np.zeros((1, ccfg.prefill_len), np.int32)),
+            # the overlapped-migration ready mask (np bool (L,) -> device)
+            jnp.asarray(np.zeros((self.cfg.num_layers,), bool)),
+            jnp.zeros((self.cfg.num_layers,), bool),
         ))
 
     def compile_counts(self) -> Dict[str, int]:
@@ -727,6 +1081,8 @@ class ContinuousEngine:
         include the cost of the iteration that produced them (run_trace
         wires this to the scaled wall clock); default: frozen at ``now``.
         """
+        import time as _time
+        t_wall0 = _time.perf_counter()
         clock = clock or (lambda: now)
         ccfg = self.ccfg
         sched = self.scheduler
@@ -735,9 +1091,11 @@ class ContinuousEngine:
         prefill_tokens = 0
         ctx = self.mesh or _nullcontext()
         self._step_migration_bytes = 0.0
+        self._step_migration_hidden_bytes = 0.0
         self._tick_migration()       # commit BEFORE this iteration's plan read
         plan = self._current_plan()
         slot_w = self._store.weights if self._store is not None else None
+        back_w, ready, tplan = self._overlap_args()
 
         splan: IterationPlan = sched.schedule(now)
 
@@ -757,7 +1115,7 @@ class ContinuousEngine:
                 next_tok, _, temp, stats = self._prefill_fn(
                     self.params, {"tokens": jnp.asarray(toks)},
                     self._temp_cache, plan, pred, last, jnp.asarray(tw),
-                    slot_w)
+                    slot_w, back_w, ready, tplan)
                 self.pool = self._write_fn(self.pool, temp, table)
             tok0 = int(np.asarray(next_tok)[0, 0])
             req.generated.append(tok0)
@@ -786,7 +1144,7 @@ class ContinuousEngine:
                     self.params, jnp.asarray(self._last_tokens[:, None]),
                     self.pool, jnp.asarray(sched.tables.tables),
                     jnp.asarray(sched.tables.lengths), plan,
-                    jnp.asarray(active), slot_w)
+                    jnp.asarray(active), slot_w, back_w, ready, tplan)
             nt = np.asarray(next_tok)
             for slot in decode_slots:
                 req = sched.slots[slot]
@@ -806,11 +1164,24 @@ class ContinuousEngine:
             if (self.strategy != "none"
                     and self.iterations % self.predict_interval == 0):
                 self.replan()
+            elif (self._overlap and self.strategy != "none"
+                  and self.ccfg.prefetch_lead > 0
+                  and self._executor is not None
+                  and not self._executor.active
+                  and self.predict_interval > self.ccfg.prefetch_lead
+                  and (self.iterations + self.ccfg.prefetch_lead)
+                  % self.predict_interval == 0):
+                # the predictors publish next-window hot experts EARLY:
+                # start moving weights toward the predicted plan now, so
+                # the boundary re-plan finds the transfer already hidden
+                # under this window's forward compute
+                self._prebegin_migration()
         decision = None
         if self.controller is not None and self.cfg.is_moe:
             decision = self.controller.observe(
                 iter_counts, now,
-                migration_bytes=self._step_migration_bytes)
+                migration_bytes=self._step_migration_bytes,
+                migration_hidden_bytes=self._step_migration_hidden_bytes)
             if decision is not None:
                 self._apply_decision(decision)
         events.decision = decision
@@ -818,6 +1189,16 @@ class ContinuousEngine:
         dt = clock() - now
         self._recent_step_s = (dt if self._recent_step_s <= 0
                                else 0.9 * self._recent_step_s + 0.1 * dt)
+        if self._step_migration_bytes == 0:
+            # migration-free steps calibrate the overlap window (the
+            # compute time a staged fill can hide under). Measured on the
+            # WALL clock, not the driver's virtual clock — the window is a
+            # physical property of the forward pass, and frozen-clock
+            # drivers (tests, fixed-rate replay) would otherwise report 0.
+            wall = _time.perf_counter() - t_wall0
+            self._recent_serve_s = (
+                wall if self._recent_serve_s <= 0
+                else 0.9 * self._recent_serve_s + 0.1 * wall)
         self.metrics.record_iteration(
             now, dt, prefill_tokens=prefill_tokens,
             decode_tokens=len(decode_slots),

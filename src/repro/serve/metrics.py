@@ -131,10 +131,16 @@ class ServeMetrics:
         self.phase_times: Dict[str, float] = {}   # dispatch phase breakdown
         # replica-weight migration accounting (repro.runtime): planned =
         # bytes a re-plan's diff would move; moved = bytes actually shipped
-        # by the executor; stall = modeled serialized wire time
+        # by the executor; stall = modeled serialized wire time, split into
+        # hidden (overlapped with forward compute by the layer-staged
+        # prefetcher) and exposed (still on the serving critical path);
+        # prebegun/cancelled = predictive pre-migrations started before the
+        # re-plan boundary / abandoned on misprediction
         self.migration: Dict[str, float] = {
             "planned_bytes": 0.0, "bytes_moved": 0.0, "stall_s": 0.0,
-            "replans": 0.0, "commits": 0.0, "rejected": 0.0}
+            "hidden_s": 0.0, "exposed_s": 0.0,
+            "replans": 0.0, "commits": 0.0, "rejected": 0.0,
+            "prebegun": 0.0, "cancelled": 0.0}
         self._win_counts: Optional[np.ndarray] = None
         self._win: Optional[WindowRecord] = None
         self._t0: Optional[float] = None
@@ -194,17 +200,26 @@ class ServeMetrics:
     # ----------------------------------------------------------- migration
     def record_migration(self, *, planned_bytes: float = 0.0,
                          bytes_moved: float = 0.0, stall_s: float = 0.0,
+                         hidden_s: float = 0.0, exposed_s: float = 0.0,
                          replanned: bool = False, committed: bool = False,
-                         rejected: bool = False):
+                         rejected: bool = False, prebegun: bool = False,
+                         cancelled: bool = False):
         """Account one replica-migration event (re-plan diffed, chunk
-        executed, swap committed, or re-plan rejected by the cost gate)."""
+        executed, swap committed, re-plan rejected by the cost gate, a
+        predictive pre-begin, or a cancel-on-misprediction). ``hidden_s``
+        / ``exposed_s`` split the modeled wire time of the chunks a step
+        issued into overlapped-with-compute vs critical-path seconds."""
         m = self.migration
         m["planned_bytes"] += float(planned_bytes)
         m["bytes_moved"] += float(bytes_moved)
         m["stall_s"] += float(stall_s)
+        m["hidden_s"] += float(hidden_s)
+        m["exposed_s"] += float(exposed_s)
         m["replans"] += bool(replanned)
         m["commits"] += bool(committed)
         m["rejected"] += bool(rejected)
+        m["prebegun"] += bool(prebegun)
+        m["cancelled"] += bool(cancelled)
 
     # ---------------------------------------------------------- per-request
     def record_completion(self, t: RequestTiming):
@@ -231,9 +246,13 @@ class ServeMetrics:
             "migration_planned_bytes": mig["planned_bytes"],
             "migration_bytes_moved": mig["bytes_moved"],
             "migration_stall_us": mig["stall_s"] * 1e6,
+            "migration_hidden_s": mig["hidden_s"],
+            "migration_exposed_s": mig["exposed_s"],
             "migration_replans": mig["replans"],
             "migration_commits": mig["commits"],
             "migration_rejected": mig["rejected"],
+            "migration_prebegun": mig["prebegun"],
+            "migration_cancelled": mig["cancelled"],
             "completed": float(len(ts)),
             "ttft_p50": _pct(ttfts, 50), "ttft_p99": _pct(ttfts, 99),
             "tpot_mean": float(np.mean(tpots)) if tpots else 0.0,

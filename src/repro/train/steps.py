@@ -86,12 +86,21 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, lr_fn=None,
 
 
 def make_prefill_step(cfg: ModelConfig, rt: Runtime):
+    """Batched prefill. The trailing ``slot_weights_back / slot_ready /
+    target_plan`` triple is the overlapped-migration double-buffer view
+    (``MoEConfig.overlap_migration``): all traced, so the engines can keep
+    serving while a staged migration fills layer by layer — one compile
+    covers idle and in-flight steps alike."""
     def prefill_step(params, batch, cache, plan=None, predicted_idx=None,
-                     slot_weights=None):
+                     slot_weights=None, slot_weights_back=None,
+                     slot_ready=None, target_plan=None):
         logits, cache, stats = forward(params, cfg, batch, rt, mode="prefill",
                                        cache=cache, plan=plan,
                                        predicted_idx=predicted_idx,
-                                       slot_weights=slot_weights)
+                                       slot_weights=slot_weights,
+                                       slot_weights_back=slot_weights_back,
+                                       slot_ready=slot_ready,
+                                       target_plan=target_plan)
         return logits, cache, stats
     return prefill_step
 
@@ -134,13 +143,18 @@ def make_slot_prefill_step(cfg: ModelConfig, rt: Runtime):
     masks padding out of the MoE expert histograms. Everything is traced,
     so one compile per prompt-length bucket."""
     def prefill_step(params, batch, cache, plan=None, predicted_idx=None,
-                     last_pos=None, token_weight=None, slot_weights=None):
+                     last_pos=None, token_weight=None, slot_weights=None,
+                     slot_weights_back=None, slot_ready=None,
+                     target_plan=None):
         logits, cache, stats = forward(params, cfg, batch, rt, mode="prefill",
                                        cache=cache, plan=plan,
                                        predicted_idx=predicted_idx,
                                        last_pos=last_pos,
                                        token_weight=token_weight,
-                                       slot_weights=slot_weights)
+                                       slot_weights=slot_weights,
+                                       slot_weights_back=slot_weights_back,
+                                       slot_ready=slot_ready,
+                                       target_plan=target_plan)
         next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
         return next_tok, logits, cache, stats
     return prefill_step
@@ -153,13 +167,18 @@ def make_paged_decode_step(cfg: ModelConfig, rt: Runtime):
     traced (B,) vector — no recompilation as requests join/leave). Returns
     greedy next tokens for every slot; the engine masks idle slots."""
     def decode_step(params, tokens, pool, block_tables, lengths, plan=None,
-                    token_weight=None, slot_weights=None):
+                    token_weight=None, slot_weights=None,
+                    slot_weights_back=None, slot_ready=None,
+                    target_plan=None):
         logits, pool, stats = forward(params, cfg, {"tokens": tokens}, rt,
                                       mode="decode", cache=pool,
                                       cache_len=lengths, plan=plan,
                                       block_tables=block_tables,
                                       token_weight=token_weight,
-                                      slot_weights=slot_weights)
+                                      slot_weights=slot_weights,
+                                      slot_weights_back=slot_weights_back,
+                                      slot_ready=slot_ready,
+                                      target_plan=target_plan)
         next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
         return next_tok, logits, pool, stats
     return decode_step
@@ -167,11 +186,15 @@ def make_paged_decode_step(cfg: ModelConfig, rt: Runtime):
 
 def make_decode_step(cfg: ModelConfig, rt: Runtime):
     def decode_step(params, tokens, cache, cache_len, plan=None,
-                    slot_weights=None):
+                    slot_weights=None, slot_weights_back=None,
+                    slot_ready=None, target_plan=None):
         logits, cache, stats = forward(params, cfg, {"tokens": tokens}, rt,
                                        mode="decode", cache=cache,
                                        cache_len=cache_len, plan=plan,
-                                       slot_weights=slot_weights)
+                                       slot_weights=slot_weights,
+                                       slot_weights_back=slot_weights_back,
+                                       slot_ready=slot_ready,
+                                       target_plan=target_plan)
         next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
         return next_tok, logits, cache, stats
     return decode_step
