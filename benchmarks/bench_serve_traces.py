@@ -7,12 +7,28 @@ TPOT / p99 latency, goodput), per-window measured skew and the per-rank
 load imbalance the engine's ACTIVE duplication plan would produce on a
 4-rank EP deployment, and the controller's strategy-switch log.
 
+Observability artifacts per run (repro.obs):
+  * ``BENCH_serve_trace.json`` — merged Chrome trace-event JSON (local
+    driver + meshed subprocess as separate process rows; open in
+    Perfetto) with admission/prefill/decode/observe spans, the
+    route/pack/a2a/ffn/combine dispatch-profile track, plan-switch and
+    GPS-verdict instants, and migration begin/tick/commit spans;
+  * ``BENCH_gps_audit.json`` — every controller verdict with the full
+    input vector ``recommend_strategy`` saw.
+
 Checked invariants (this benchmark doubles as the subsystem's
 acceptance test — tests/test_continuous_serve.py calls ``run`` too):
   * every request in the trace completes;
   * the controller switches strategy at least once as the trace's topic
     mixture (and hence measured skew) shifts;
-  * zero XLA recompilation after ``warmup()``.
+  * zero XLA recompilation after ``warmup()``;
+  * the merged trace validates against the Chrome trace-event schema and
+    contains the dispatch-phase + plan-switch spans (``trace_ok``);
+  * the GPS audit log carries >= 1 verdict and the predictor-accuracy
+    tracker scored >= 1 prediction window;
+  * the DISABLED tracer costs < 1% of a meshed serving step
+    (``tracer_off_overhead_frac`` — instrumentation is unconditional, so
+    its off-mode cost is a hard budget, gated by ``check_regression``).
 
 A second, MESHED smoke section (subprocess, 8 fake host devices) runs the
 ContinuousEngine on a real EP mesh in store mode with overlapped
@@ -27,7 +43,9 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import textwrap
+import time
 
 import jax
 import numpy as np
@@ -42,6 +60,16 @@ def _smoke() -> bool:
 # an order of magnitude, which is what the column is there to catch).
 MESHED_SLO_MS = 2500.0
 
+# Disabled-tracer budget: instrumentation is compiled in unconditionally,
+# so with tracing OFF the per-step cost of all span/instant call sites
+# must stay under 1% of a meshed serving step.
+TRACER_OFF_BUDGET_FRAC = 0.01
+
+# Conservative count of tracer call sites one engine step can hit (step +
+# admission + 2 prefills + decode + observe spans, migration tick span +
+# begin/commit instants, plan/gps instants, boundary counters).
+_TRACER_OPS_PER_STEP = 24
+
 _MESHED_SUB = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -49,6 +77,7 @@ import json, time
 import jax, numpy as np
 from repro.configs.registry import get_config
 from repro.models.transformer import init_model
+from repro.obs import SpanTracer
 from repro.serve import ContinuousConfig, ContinuousEngine
 from repro.serve.scheduler import ServeRequest
 
@@ -58,7 +87,9 @@ params = init_model(jax.random.PRNGKey(0), cfg)
 ccfg = ContinuousConfig(max_slots=4, prefill_len=32, block_size=16,
                         max_len=48, strategy="dist_only",
                         predict_interval=4, dup_slots=1, metrics_window=4)
-eng = ContinuousEngine(cfg, params, ccfg, mesh=mesh, ep_ranks=4)
+tracer = SpanTracer(process_name="repro-serve-meshed")
+eng = ContinuousEngine(cfg, params, ccfg, mesh=mesh, ep_ranks=4,
+                       tracer=tracer)
 eng.warmup()
 rng = np.random.default_rng(0)
 for i in range(6):
@@ -80,6 +111,9 @@ except AssertionError:
     recompiled = 1
 eng.metrics.flush(eng._plan_stack, eng.ep_ranks, 1)
 s = eng.metrics.summary()
+trace_out = os.environ.get("REPRO_TRACE_OUT")
+if trace_out:
+    tracer.export(trace_out)
 print(json.dumps({
     "step_p50_ms": float(np.percentile(walls, 50) * 1e3),
     "step_p99_ms": float(np.percentile(walls, 99) * 1e3),
@@ -92,17 +126,40 @@ print(json.dumps({
 """
 
 
-def _run_meshed() -> dict:
+def _run_meshed(trace_out: str) -> dict:
     import repro
     src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(_MESHED_SUB)],
         capture_output=True, text=True, timeout=1800,
-        env=dict(os.environ, PYTHONPATH=src_root))
+        env=dict(os.environ, PYTHONPATH=src_root,
+                 REPRO_TRACE_OUT=trace_out))
     if out.returncode != 0:
         raise RuntimeError(
             f"meshed serve subprocess failed:\n{out.stderr[-2000:]}")
     return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _tracer_off_overhead_frac(step_p50_s: float) -> float:
+    """Microbenchmark the DISABLED tracer's per-call cost and scale it to
+    one meshed serving step. A direct on/off A/B of full steps would be
+    drowned by CI machine noise; the disabled path is pure Python with no
+    shared state, so cost-per-op x sites-per-step is both stable and an
+    upper bound (the estimate assumes every site fires every step)."""
+    from repro.obs import SpanTracer
+    off = SpanTracer(capacity=16, enabled=False)
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with off.span("x"):
+            pass
+    span_cost = (time.perf_counter() - t0) / n
+    t0 = time.perf_counter()
+    for _ in range(n):
+        off.instant("x")
+    inst_cost = (time.perf_counter() - t0) / n
+    per_step = _TRACER_OPS_PER_STEP * max(span_cost, inst_cost)
+    return per_step / max(step_p50_s, 1e-9)
 
 
 def run(verbose: bool = True, smoke: bool = None):
@@ -111,6 +168,8 @@ def run(verbose: bool = True, smoke: bool = None):
     from repro.core.simulator import A100_PCIE
     from repro.data.synthetic import make_routing_trace
     from repro.models.transformer import init_model
+    from repro.obs import (SpanTracer, merge_traces, span_names,
+                           validate_chrome_trace)
     from repro.serve import (ContinuousConfig, ContinuousEngine,
                              ControllerConfig, OnlineGPSController)
     from repro.workloads import skew_shift_trace, to_serve_requests
@@ -145,29 +204,76 @@ def run(verbose: bool = True, smoke: bool = None):
             skew_cap_target=full_cfg.moe.num_experts / full_cfg.moe.top_k),
         predictor_available=True, initial_strategy="dist_only")
 
+    tracer = SpanTracer(process_name="repro-serve-local")
     ccfg = ContinuousConfig(max_slots=8, prefill_len=64, block_size=16,
                             max_len=96, strategy="dist_only",
                             predict_interval=4, dup_slots=1,
                             metrics_window=8)
     eng = ContinuousEngine(cfg, params, ccfg, ep_ranks=4,
-                           predictor=predictor, controller=controller)
+                           predictor=predictor, controller=controller,
+                           tracer=tracer)
     eng.warmup()
     end = eng.run_trace(to_serve_requests(trace), time_scale=20.0)
     eng.assert_no_recompiles()
 
+    # prefill-shaped dispatch profile -> the phase_*_us columns, then
+    # reset and re-profile at the decode batch shape -> decode_phase_*_us
+    # (without reset_phases the second profile would double-accumulate)
     phases = eng.profile_phases(iters=2 if smoke else 5)
     s = eng.metrics.summary()
+    eng.metrics.reset_phases()
+    dec_phases = eng.profile_phases(iters=2 if smoke else 5,
+                                    tokens=ccfg.max_slots)
+    s.update({f"decode_phase_{k}_us": v * 1e6 for k, v in dec_phases.items()})
+
     n_completed = int(s["completed"])
     n_switches = controller.num_switches
+    audit = controller.audit
 
-    meshed = _run_meshed()
+    out_dir = os.environ.get("REPRO_BENCH_OUT", ".")
+    with tempfile.TemporaryDirectory() as td:
+        meshed_trace_path = os.path.join(td, "meshed_trace.json")
+        meshed = _run_meshed(meshed_trace_path)
+        with open(meshed_trace_path) as f:
+            meshed_doc = json.load(f)
+
+    merged = merge_traces([tracer.to_chrome(), meshed_doc],
+                          names=["repro-serve-local", "repro-serve-meshed"])
+    merged["otherData"]["gps_audit"] = audit.to_obj()
+    merged["otherData"]["pred_accuracy"] = eng.accuracy.to_obj()
+    trace_path = os.path.join(out_dir, "BENCH_serve_trace.json")
+    with open(trace_path, "w") as f:
+        json.dump(merged, f)
+    audit_path = os.path.join(out_dir, "BENCH_gps_audit.json")
+    with open(audit_path, "w") as f:
+        json.dump({"records": audit.to_obj(), "summary": audit.summary(),
+                   "switches": [r.explain() for r in audit.switches]}, f,
+                  indent=2)
+
+    # schema + span-presence validation of the artifact CI uploads
+    errors = validate_chrome_trace(merged)
+    names = span_names(merged)
+    required = {"route", "pack", "a2a", "ffn", "combine",
+                "step", "plan.switch", "gps.decision"}
+    if meshed["migration_commits"] > 0:
+        required |= {"migration.tick", "migration.commit"}
+    missing = sorted(required - names)
+    trace_ok = float(not errors and not missing)
+
+    overhead_frac = _tracer_off_overhead_frac(meshed["step_p50_ms"] / 1e3)
+
     s = dict(s,
              meshed_step_p50_ms=meshed["step_p50_ms"],
              meshed_step_p99_ms=meshed["step_p99_ms"],
              meshed_recompiled=float(meshed["recompiled"]),
              meshed_completed=float(meshed["completed"]),
              meshed_slo_ms=MESHED_SLO_MS,
-             meshed_slo_ok=float(meshed["step_p50_ms"] <= MESHED_SLO_MS))
+             meshed_slo_ok=float(meshed["step_p50_ms"] <= MESHED_SLO_MS),
+             trace_ok=trace_ok,
+             trace_events=float(len(merged["traceEvents"])),
+             tracer_off_overhead_frac=overhead_frac,
+             **{k: float(v) for k, v in audit.summary().items()},
+             **{k: float(v) for k, v in eng.accuracy.summary().items()})
 
     if verbose:
         print(f"trace: {len(trace)} requests over {horizon:.0f}s (virtual), "
@@ -181,13 +287,25 @@ def run(verbose: bool = True, smoke: bool = None):
               f"{s['throughput_tok_s']:.0f} tok/s, "
               f"{s['throughput_req_s']:.2f} req/s, "
               f"preemptions={int(s['preemptions'])}")
-        print("\nwindow  t_end   skew  imbalance  strategy")
+        print("\nwindow  t_end   skew  imbalance  strategy  "
+              "pred_hit  pred_kl")
         for w in eng.metrics.windows:
+            hit = f"{w.pred_hit_rate:8.2f}" if w.pred_hit_rate == \
+                w.pred_hit_rate else "       -"
+            kl = f"{w.pred_kl:7.3f}" if w.pred_kl == w.pred_kl else "      -"
             print(f"  {w.t_end:8.1f}s {w.skew:5.2f}  {w.imbalance:9.2f}  "
-                  f"{w.strategy}")
+                  f"{w.strategy:16s} {hit} {kl}")
         print("\ncontroller switches:")
         for line in controller.switch_log():
             print("  " + line)
+        print("\nGPS audit (last 4 verdicts of "
+              f"{int(s['gps_verdicts'])}):")
+        for line in audit.explain(last=4).splitlines():
+            print("  " + line)
+        if s.get("pred_windows", 0):
+            print(f"\npredictor accuracy: {int(s['pred_windows'])} windows, "
+                  f"hit_rate={s['pred_hit_rate']:.2f} "
+                  f"kl={s['pred_kl']:.3f} l1={s['pred_l1']:.3f}")
         print(f"\nreplica migration: replans={int(s['migration_replans'])} "
               f"planned={s['migration_planned_bytes'] / 1e6:.2f}MB "
               f"moved={s['migration_bytes_moved'] / 1e6:.2f}MB "
@@ -203,13 +321,20 @@ def run(verbose: bool = True, smoke: bool = None):
               f"{'OK' if s['meshed_slo_ok'] else 'MISS'}), "
               f"recompiles={int(s['meshed_recompiled'])}, "
               f"completed={int(s['meshed_completed'])}")
+        print(f"trace artifact: {trace_path} "
+              f"({int(s['trace_events'])} events, "
+              f"{'valid' if trace_ok else 'INVALID: ' + '; '.join(errors[:3] + missing)}) | "
+              f"gps audit: {audit_path} | "
+              f"tracer-off overhead={overhead_frac:.2e} of a meshed step "
+              f"(budget {TRACER_OFF_BUDGET_FRAC:.0%})")
         if phases:
-            print("\ndispatch phase breakdown (prefill shape, "
+            print("\ndispatch phase breakdown (prefill vs decode shape, "
                   f"impl={eng.moe_cfg.dispatch_impl}):")
             total = phases.get("total", 0.0) or 1.0
             for k in ("route", "pack", "a2a", "ffn", "combine"):
                 print(f"  {k:8s} {phases[k]*1e6:9.0f}us "
-                      f"({100.0 * phases[k] / total:4.1f}%)")
+                      f"({100.0 * phases[k] / total:4.1f}%)  "
+                      f"decode {dec_phases[k]*1e6:9.0f}us")
             if "migrate" in phases:
                 print(f"  {'migrate':8s} {phases['migrate']*1e6:9.0f}us "
                       "(per plan-switch chunk, not per step)")
@@ -220,9 +345,19 @@ def run(verbose: bool = True, smoke: bool = None):
     assert n_completed == len(trace), (n_completed, len(trace))
     if not smoke:
         assert n_switches >= 1, "controller never switched strategy"
+    assert len(audit) >= 1, "GPS audit log recorded no verdicts"
+    assert s.get("pred_windows", 0) >= 1, \
+        "predictor-accuracy tracker scored no windows"
+    assert trace_ok == 1.0, \
+        f"trace artifact invalid: {errors[:5]} missing={missing}"
+    assert overhead_frac < TRACER_OFF_BUDGET_FRAC, (
+        f"disabled tracer costs {overhead_frac:.1%} of a meshed step "
+        f"(budget {TRACER_OFF_BUDGET_FRAC:.0%})")
 
     derived = (f"completed={n_completed}/{len(trace)} "
                f"switches={n_switches} "
+               f"verdicts={int(s['gps_verdicts'])} "
+               f"pred_hit={s.get('pred_hit_rate', float('nan')):.2f} "
                f"ttft_p99={s['ttft_p99']*1e3:.0f}ms "
                f"tpot_p99={s['tpot_p99']*1e3:.0f}ms "
                f"meshed_p50={s['meshed_step_p50_ms']:.0f}ms")

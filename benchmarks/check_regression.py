@@ -14,9 +14,12 @@ committed baseline and FAILS (exit 1) when:
   * the migration bench's store speedup fell below 1.0 (persistent replica
     buffers must never be slower than the per-step pool gather),
   * overlapped migration hides less than half the plan-switch stall, or
-    its final store diverges from the synchronous path (bit-exactness), or
+    its final store diverges from the synchronous path (bit-exactness),
   * the meshed continuous-serving smoke recompiled after warmup or missed
-    its step-time SLO.
+    its step-time SLO, or
+  * the serving trace artifact failed schema validation / lost required
+    spans (``trace_ok``), or the disabled tracer's estimated per-step
+    cost reached 1% of a meshed serving step.
 
 Escape hatch: set ``REPRO_BENCH_REFRESH_BASELINE=1`` to overwrite the
 baseline with the current measurement instead of gating (use when a
@@ -82,6 +85,15 @@ def compare(current: dict, baseline: dict, tol: float) -> list:
             f"meshed serving step-time SLO missed: "
             f"p50={serve.get('meshed_step_p50_ms', 0):.0f}ms > "
             f"{serve.get('meshed_slo_ms', 0):.0f}ms")
+    if serve.get("trace_ok", 1.0) != 1.0:
+        failures.append(
+            "serve trace artifact failed Chrome trace-event schema "
+            "validation or is missing required spans (trace_ok != 1)")
+    off_frac = serve.get("tracer_off_overhead_frac")
+    if off_frac is not None and off_frac >= 0.01:
+        failures.append(
+            f"disabled tracer costs {100 * off_frac:.1f}% of a meshed "
+            f"serving step (budget 1%)")
     return failures
 
 

@@ -13,21 +13,31 @@ end without reproducing the full figures.
 shared by all benches (the schema the CI bench-regression gate and the
 BENCH_* trajectory tracking consume):
 
-  {"schema": 1, "smoke": bool, "total_wall_s": float,
+  {"schema": 2, "smoke": bool, "total_wall_s": float,
+   "meta": {"git_sha": str, "timestamp_utc": str, "jax_version": str,
+            "backend": str, "device_kind": str, "device_count": int,
+            "python": str},
    "benches": {name: {"wall_us": float, "ok": bool, "derived": str,
                       "summary": {metric: number, ...} | null}}}
 
 Benches whose ``run()`` returns a dict of scalars as its first element get
 that dict embedded as ``summary``. ``benchmarks/bench_dispatch`` also
 emits its own ``BENCH_dispatch.json`` phase-breakdown artifact.
+
+``--history PATH``: append one compact JSONL line (meta + total wall +
+per-bench wall/ok) per run — a durable measurement trajectory across
+commits (CI appends to ``benchmarks/history.jsonl`` and uploads it).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import platform
+import subprocess
 import sys
 import time
+from datetime import datetime, timezone
 
 
 def _scalar_summary(obj):
@@ -43,6 +53,35 @@ def _scalar_summary(obj):
     return out
 
 
+def run_meta() -> dict:
+    """Provenance for a result document: without the commit + software +
+    device identity a BENCH_*.json number cannot be compared across runs."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    meta = {
+        "git_sha": sha,
+        "timestamp_utc": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+        "python": platform.python_version(),
+    }
+    try:
+        import jax
+        dev = jax.devices()[0]
+        meta.update(jax_version=jax.__version__,
+                    backend=jax.default_backend(),
+                    device_kind=dev.device_kind,
+                    device_count=jax.device_count())
+    except Exception as e:                       # keep the harness going
+        meta.update(jax_version="unavailable", backend=str(e)[:80],
+                    device_kind="unknown", device_count=0)
+    return meta
+
+
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if "--smoke" in argv:
@@ -55,6 +94,15 @@ def main(argv=None) -> int:
             json_path = argv[i + 1]
         except IndexError:
             print("--json requires a PATH argument", file=sys.stderr)
+            return 2
+        del argv[i:i + 2]
+    history_path = None
+    if "--history" in argv:
+        i = argv.index("--history")
+        try:
+            history_path = argv[i + 1]
+        except IndexError:
+            print("--history requires a PATH argument", file=sys.stderr)
             return 2
         del argv[i:i + 2]
 
@@ -104,16 +152,30 @@ def main(argv=None) -> int:
                              "derived": f"{type(e).__name__}: {e}",
                              "summary": None}
         sys.stdout.flush()
+    meta = run_meta()
+    total_wall_s = time.time() - t_all
     if json_path:
         doc = {
-            "schema": 1,
+            "schema": 2,
             "smoke": os.environ.get("REPRO_BENCH_SMOKE") == "1",
-            "total_wall_s": time.time() - t_all,
+            "total_wall_s": total_wall_s,
+            "meta": meta,
             "benches": records,
         }
         with open(json_path, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {json_path}")
+    if history_path:
+        line = {
+            **meta,
+            "smoke": os.environ.get("REPRO_BENCH_SMOKE") == "1",
+            "total_wall_s": total_wall_s,
+            "benches": {n: {"wall_us": r["wall_us"], "ok": r["ok"]}
+                        for n, r in records.items()},
+        }
+        with open(history_path, "a") as f:
+            f.write(json.dumps(line) + "\n")
+        print(f"appended history to {history_path}")
     return 1 if failures else 0
 
 

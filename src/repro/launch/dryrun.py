@@ -51,7 +51,7 @@ def lower_one(cfg: ModelConfig, shape: InputShape, mesh, *,
     params, pspecs = abstract_params(cfg, mesh, fsdp=fsdp,
                                      expert_tp=expert_tp)
     plan = plan_args(cfg, rt.ep_ranks)
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     with mesh:
         if shape.kind == "train":
@@ -79,7 +79,7 @@ def lower_one(cfg: ModelConfig, shape: InputShape, mesh, *,
             lowered = fn.lower(params, input_specs(cfg, shape, mesh)["tokens"],
                                cache)
         compiled = lowered.compile()
-    return lowered, compiled, time.time() - t0
+    return lowered, compiled, time.perf_counter() - t0
 
 
 def run_combo(arch: str, shape_name: str, multi_pod: bool, out_dir: str,

@@ -35,6 +35,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--data-mesh", type=int, default=0)
     ap.add_argument("--model-mesh", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(open in Perfetto / chrome://tracing)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -59,11 +62,16 @@ def main(argv=None) -> int:
             cfg.num_layers, cfg.moe.num_experts, cfg.vocab_size
         ).fit(trace.experts, trace.tokens)
 
+    tracer = None
+    if args.trace_out:
+        from repro.obs import SpanTracer
+        tracer = SpanTracer(process_name="repro-launch-serve")
     engine = ServeEngine(cfg, params,
                          ServeConfig(strategy=args.strategy,
                                      dup_slots=args.dup_slots,
                                      max_len=args.seq + args.new_tokens),
-                         mesh=mesh, ep_ranks=ep_ranks, predictor=predictor)
+                         mesh=mesh, ep_ranks=ep_ranks, predictor=predictor,
+                         tracer=tracer)
 
     sched = BatchScheduler(args.batch, args.seq)
     rng = np.random.default_rng(args.seed)
@@ -72,7 +80,7 @@ def main(argv=None) -> int:
         toks = next(gen)["tokens"][0]
         sched.submit(Request(rid, toks, max_new_tokens=args.new_tokens))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     batches = 0
     while sched.has_work():
         batch = sched.next_batch()
@@ -82,10 +90,15 @@ def main(argv=None) -> int:
         batches += 1
         if cfg.is_moe and tele:
             print(f"batch {batches}: measured routing skew={tele['skew']:.2f}")
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     done = len(sched.completed)
     print(f"served {done} requests in {batches} batches, {dt:.1f}s "
           f"({done * args.new_tokens / dt:.1f} tok/s)")
+    if tracer is not None:
+        tracer.export(args.trace_out,
+                      extra={"pred_accuracy": engine.accuracy.to_obj()
+                             if engine.accuracy else []})
+        print(f"trace written to {args.trace_out}")
     return 0 if done == args.requests else 1
 
 

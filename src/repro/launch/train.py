@@ -77,7 +77,7 @@ def main(argv=None) -> int:
 
     gen = token_batches(args.seed, cfg.vocab_size, args.batch, args.seq)
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(args.steps):
         raw = next(gen)
         batch = {k: jnp.asarray(v) for k, v in raw.items()}
@@ -101,7 +101,7 @@ def main(argv=None) -> int:
             print(f"step {step:4d} loss={losses[-1]:.4f} "
                   f"lr={float(metrics['lr']):.2e} "
                   f"gnorm={float(metrics['grad_norm']):.2f}{extra}")
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"done: {args.steps} steps in {dt:.1f}s "
           f"({dt / args.steps * 1e3:.0f} ms/step); "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")

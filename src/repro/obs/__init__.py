@@ -1,0 +1,18 @@
+"""Unified serving observability: span tracer with Chrome-trace/Perfetto
+export (``trace``), metrics registry with Prometheus/JSONL exporters
+(``metrics``), GPS decision audit log (``audit``), and predictor-accuracy
+tracking (``accuracy``). See README "Observability"."""
+
+from repro.obs.accuracy import (PredictorAccuracyTracker, WindowAccuracy,
+                                hist_hit_rate, hist_kl, hist_l1)
+from repro.obs.audit import GPSAuditLog, GPSAuditRecord
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.trace import (NULL_TRACER, SpanTracer, merge_traces,
+                             span_names, validate_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "GPSAuditLog", "GPSAuditRecord", "Histogram",
+    "MetricsRegistry", "NULL_TRACER", "PredictorAccuracyTracker",
+    "SpanTracer", "WindowAccuracy", "hist_hit_rate", "hist_kl", "hist_l1",
+    "merge_traces", "span_names", "validate_chrome_trace",
+]

@@ -1,0 +1,56 @@
+"""Chrome trace-event schema validation CLI (the CI gate for trace
+artifacts).
+
+  PYTHONPATH=src python -m repro.obs.validate TRACE.json \
+      [--require SPAN_NAME ...]
+
+Exits non-zero when the document fails the trace-event schema (it would
+not load in Perfetto) or a ``--require``d span/event name is absent.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.trace import span_names, validate_chrome_trace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", help="trace JSON files to validate")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="NAME",
+                    help="fail unless an event with this name is present")
+    args = ap.parse_args(argv)
+
+    failed = False
+    for path in args.paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable: {e}", file=sys.stderr)
+            failed = True
+            continue
+        errors = validate_chrome_trace(doc)
+        names = span_names(doc)
+        missing = [n for n in args.require if n not in names]
+        events = doc.get("traceEvents", []) if isinstance(doc, dict) else []
+        n_events = len(events)
+        if errors or missing:
+            failed = True
+            print(f"{path}: INVALID ({n_events} events)", file=sys.stderr)
+            for e in errors:
+                print(f"  schema: {e}", file=sys.stderr)
+            for n in missing:
+                print(f"  missing required span/event: {n}", file=sys.stderr)
+        else:
+            print(f"{path}: OK ({n_events} events, "
+                  f"{len(names)} distinct names)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.placement import PlacementPlan, plan_dims
+from repro.obs.trace import NULL_TRACER
 from repro.runtime.diff import PlanDiff
 
 
@@ -88,14 +89,18 @@ class MigrationExecutor:
 
     def __init__(self, step_fn, experts: Dict[str, jnp.ndarray],
                  entry_bytes: int, *, chunk: int = 8,
-                 chunks_per_tick: int = 0):
+                 chunks_per_tick: int = 0, tracer=None):
         """``chunks_per_tick``: migration step calls per engine iteration
-        (the per-step budget); 0 = drain the whole diff in one tick."""
+        (the per-step budget); 0 = drain the whole diff in one tick.
+        ``tracer``: optional ``repro.obs.SpanTracer`` — begin/cancel/commit
+        instants plus one ``migration.tick`` span per active tick land on
+        a dedicated "migration" track."""
         self.step_fn = step_fn
         self.experts = experts
         self.entry_bytes = int(entry_bytes)
         self.chunk = max(int(chunk), 1)
         self.chunks_per_tick = int(chunks_per_tick)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._diff: Optional[PlanDiff] = None
         self._back: Optional[Dict[str, jnp.ndarray]] = None
         self._target_plan: Optional[PlacementPlan] = None
@@ -116,10 +121,21 @@ class MigrationExecutor:
         self._target_plan = target_plan
         self._target_se = np.asarray(diff.target_slot_experts)
         self._cursor = 0
+        self.tracer.instant(
+            "migration.begin", cat="migration", track="migration",
+            args={"entries": int(diff.num_entries),
+                  "bytes": int(diff.num_entries) * self.entry_bytes})
 
     def cancel(self) -> None:
         """Abandon an in-flight migration (the target plan was superseded
         by a later adoption). The live buffers were never touched."""
+        if self._diff is not None:
+            self.tracer.instant(
+                "migration.cancel", cat="migration", track="migration",
+                args={"filled_entries": int(self._cursor)})
+        self._clear()
+
+    def _clear(self) -> None:
         self._diff = self._back = self._target_plan = self._target_se = None
         self._cursor = 0
 
@@ -147,17 +163,26 @@ class MigrationExecutor:
         if not self.active:
             return None, 0
         cap = self.chunks_per_tick if budget is None else int(budget)
-        moved = 0
-        chunks = 0
-        while self._cursor < self._diff.num_entries:
-            moved += self._run_chunk()
-            chunks += 1
-            if cap and chunks >= cap:
-                break
-        if self._cursor < self._diff.num_entries:
+        with self.tracer.span("migration.tick", cat="migration",
+                              track="migration") as sp:
+            moved = 0
+            chunks = 0
+            while self._cursor < self._diff.num_entries:
+                moved += self._run_chunk()
+                chunks += 1
+                if cap and chunks >= cap:
+                    break
+            done = self._cursor >= self._diff.num_entries
+            sp.set_args(chunks=chunks, moved_bytes=moved * self.entry_bytes,
+                        remaining=int(self._diff.num_entries - self._cursor))
+        if not done:
             return None, moved * self.entry_bytes
         commit = (self._back, self._target_plan, self._target_se)
-        self.cancel()
+        self.tracer.instant(
+            "migration.commit", cat="migration", track="migration",
+            args={"entries": int(self._diff.num_entries),
+                  "bytes": int(self._diff.num_entries) * self.entry_bytes})
+        self._clear()
         return commit, moved * self.entry_bytes
 
 
@@ -177,9 +202,9 @@ class LayerStagedExecutor(MigrationExecutor):
 
     def __init__(self, step_fn, experts: Dict[str, jnp.ndarray],
                  entry_bytes: int, *, num_layers: int, chunk: int = 8,
-                 chunks_per_tick: int = 0):
+                 chunks_per_tick: int = 0, tracer=None):
         super().__init__(step_fn, experts, entry_bytes, chunk=chunk,
-                         chunks_per_tick=chunks_per_tick)
+                         chunks_per_tick=chunks_per_tick, tracer=tracer)
         self.num_layers = int(num_layers)
         self._layer_end: Optional[np.ndarray] = None   # (L,) cum entry count
 
@@ -194,8 +219,8 @@ class LayerStagedExecutor(MigrationExecutor):
         counts = np.bincount(staged.layer, minlength=self.num_layers)
         self._layer_end = np.cumsum(counts)
 
-    def cancel(self) -> None:
-        super().cancel()
+    def _clear(self) -> None:
+        super()._clear()
         self._layer_end = None
 
     def ready_mask(self) -> np.ndarray:

@@ -30,6 +30,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.gps import GPSReport, recommend_strategy
 from repro.core.simulator import A100_PCIE, HardwareConfig
+from repro.obs.audit import GPSAuditLog, GPSAuditRecord
 from repro.serve.metrics import window_skew
 
 
@@ -84,7 +85,8 @@ class OnlineGPSController:
 
     def __init__(self, model_cfg: ModelConfig, cfg: ControllerConfig = None,
                  *, predictor_available: bool = False,
-                 initial_strategy: str = "dist_only"):
+                 initial_strategy: str = "dist_only",
+                 audit: Optional[GPSAuditLog] = None):
         if not model_cfg.is_moe:
             raise ValueError("the GPS controller needs a MoE model")
         self.model_cfg = model_cfg
@@ -92,6 +94,9 @@ class OnlineGPSController:
         self.predictor_available = predictor_available
         self.strategy = initial_strategy
         self.predict_interval = self.cfg.volatile_interval
+        # every _evaluate appends its full recommend_strategy input vector
+        # + outcome here (repro.obs.audit), so verdicts are replayable
+        self.audit = audit if audit is not None else GPSAuditLog()
         self.decisions: List[Decision] = []
         self._iters = 0
         self._counts: Optional[np.ndarray] = None
@@ -153,6 +158,7 @@ class OnlineGPSController:
             return None
         self._skew_history.append(skew)
         vol = self._volatility()
+        strategy_before = self.strategy
 
         mig_stall = 0.0
         hidden_frac = 0.0
@@ -168,8 +174,9 @@ class OnlineGPSController:
                 self.cfg.hardware, num_layers=self.model_cfg.num_layers,
                 window_steps=self.cfg.window_iters)
 
+        skew_input = self._transfer_skew(skew)
         recommended, report = recommend_strategy(
-            self.model_cfg, self.cfg.hardware, skew=self._transfer_skew(skew),
+            self.model_cfg, self.cfg.hardware, skew=skew_input,
             batch=self.cfg.batch, seq=self.cfg.seq,
             allow_t2e=self.predictor_available,
             min_saving=self.cfg.min_saving,
@@ -200,6 +207,34 @@ class OnlineGPSController:
                      switched=switched, migration_stall_s=mig_stall,
                      migration_hidden_frac=hidden_frac, report=report)
         self.decisions.append(d)
+
+        gate = ("switched" if switched
+                else "pending" if self._pending is not None else "unchanged")
+        self.audit.append(GPSAuditRecord(
+            seq=len(self.audit.records) + self.audit.dropped,
+            t=float(now),
+            window_iters=self.cfg.window_iters,
+            skew_measured=float(skew),
+            skew_input=float(skew_input),
+            volatility=float(vol),
+            migration_bytes=float(self._migration_bytes),
+            migration_hidden_bytes=float(self._migration_hidden_bytes),
+            migration_hidden_frac=float(hidden_frac),
+            migration_stall_s=float(mig_stall),
+            batch=self.cfg.batch,
+            seq_len=self.cfg.seq,
+            allow_t2e=self.predictor_available,
+            min_saving=self.cfg.min_saving,
+            recommended=recommended,
+            strategy_before=strategy_before,
+            strategy_after=self.strategy,
+            gate=gate,
+            pending_votes=self._pending_votes,
+            predict_interval=self.predict_interval,
+            dist_only_saving=float(report.dist_only_saving),
+            t2e_saving=float(report.t2e_saving),
+            baseline_total_s=float(report.baseline.total),
+            best_total_s=float(report.best.total)))
         return d
 
     # ------------------------------------------------------------ reporting

@@ -31,6 +31,8 @@ from repro.core.duplication import duplicate_experts_host
 from repro.core.placement import PlacementPlan, identity_plan, stack_plans
 from repro.core.predictors import DistributionEstimator
 from repro.models.transformer import Runtime, forward, init_cache
+from repro.obs.accuracy import PredictorAccuracyTracker
+from repro.obs.trace import NULL_TRACER
 from repro.serve.kvcache import (BlockAllocator, init_block_pool,
                                  write_prefill_blocks)
 from repro.serve.metrics import (RequestTiming, ServeMetrics, imbalance,
@@ -154,13 +156,14 @@ class ServeEngine(_OverlapStoreMixin):
     """Batched prefill+decode with dynamic expert duplication."""
 
     def __init__(self, cfg: ModelConfig, params, serve: ServeConfig,
-                 mesh=None, ep_ranks: int = 1, predictor=None):
+                 mesh=None, ep_ranks: int = 1, predictor=None, tracer=None):
         self.cfg = cfg
         self.params = params
         self.serve = serve
         self.mesh = mesh
         self.ep_ranks = ep_ranks
         self.predictor = predictor            # Token-to-Expert model (optional)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.batches_seen = 0
         self._plan_stack: Optional[PlacementPlan] = None
         self.history: List[Dict] = []         # per-batch balance telemetry
@@ -187,9 +190,12 @@ class ServeEngine(_OverlapStoreMixin):
             self.cfg = dataclasses.replace(cfg, moe=self.moe_cfg)
             self.estimator = DistributionEstimator(
                 cfg.num_layers, cfg.moe.num_experts, ema=serve.ema)
+            self.accuracy = PredictorAccuracyTracker(
+                cfg.num_layers, cfg.moe.num_experts)
         else:
             self.moe_cfg = None
             self.estimator = None
+            self.accuracy = None
 
         self._rt_kw = dict(mesh=mesh, ep=mesh is not None,
                            ep_ranks=ep_ranks, use_duplication=use_dup)
@@ -254,7 +260,7 @@ class ServeEngine(_OverlapStoreMixin):
                 self._executor = LayerStagedExecutor(
                     self._migrate_fn, experts, self._store.entry_bytes,
                     num_layers=self.cfg.num_layers,
-                    chunk=self.serve.migrate_chunk)
+                    chunk=self.serve.migrate_chunk, tracer=self.tracer)
         return self._store.weights
 
     def _overlap_active(self) -> bool:
@@ -301,6 +307,8 @@ class ServeEngine(_OverlapStoreMixin):
         rides under the following prefill/decode steps — serving reads
         old-plan slots per layer until each layer's fill commits."""
         if not self._store_mode or self._store is None:
+            self.tracer.instant("plan.switch", cat="plan", track="plan",
+                                args={"batch": self.batches_seen})
             return target
         from repro.runtime import migrate_all, plan_diff, plans_equal
         if (self._overlap_on and self._executor.active
@@ -315,6 +323,10 @@ class ServeEngine(_OverlapStoreMixin):
                          m.duplication_slots)
         moved = diff.num_entries * self._store.entry_bytes
         self._last_migration = {"entries": diff.num_entries, "bytes": moved}
+        self.tracer.instant("plan.switch", cat="plan", track="plan",
+                            args={"batch": self.batches_seen,
+                                  "entries": int(diff.num_entries),
+                                  "bytes": float(moved)})
         if diff.num_entries == 0:
             if self._executor is not None:
                 self._executor.cancel()
@@ -393,7 +405,11 @@ class ServeEngine(_OverlapStoreMixin):
                     back_w, ready, tplan)
         self._observe(stats, num_tokens=B * S,
                       skip_replan=getattr(self, "_in_graph", False))
-        self._note_step_time(_time.perf_counter() - t0)
+        dt = _time.perf_counter() - t0
+        self.tracer.add_span("prefill", dt,
+                             ts_ns=self.tracer.now_ns() - int(dt * 1e9),
+                             args={"batch": B, "tokens": B * S})
+        self._note_step_time(dt)
         return logits, cache, stats
 
     def decode(self, tokens, cache, cache_len: int):
@@ -405,10 +421,11 @@ class ServeEngine(_OverlapStoreMixin):
         plan = self._current_plan()
         back_w, ready, tplan = self._overlap_args()
         ctx = self.mesh or _nullcontext()
-        with ctx:
-            next_tok, logits, cache, stats = decode_step(
-                self.params, tokens, cache, cache_len, plan, slot_w,
-                back_w, ready, tplan)
+        with self.tracer.span("decode", args={"cache_len": cache_len}):
+            with ctx:
+                next_tok, logits, cache, stats = decode_step(
+                    self.params, tokens, cache, cache_len, plan, slot_w,
+                    back_w, ready, tplan)
         return next_tok, logits, cache, stats
 
     def _note_step_time(self, dt: float):
@@ -448,13 +465,24 @@ class ServeEngine(_OverlapStoreMixin):
             return
         counts = np.asarray(stats["expert_counts"], np.float64)   # (L, E)
         self.estimator.update(counts)
+        self.accuracy.observe(counts)
         tele = {"batch": self.batches_seen,
                 "skew": float(counts.sum(0).max()
                               / max(counts.sum(0).mean(), 1e-9))}
         self.history.append(tele)
         if (not skip_replan and self.serve.strategy != "none"
                 and self.batches_seen % self.serve.predict_interval == 0):
+            wa = self.accuracy.close_window()
+            if wa is not None:
+                self.tracer.counter("pred_hit_rate", wa.hit_rate,
+                                    track="predictor")
+                tele["pred_hit_rate"] = wa.hit_rate
+                tele["pred_kl"] = wa.kl
             self.replan()
+            # score the distribution this re-plan just planned from
+            # against the next window's realized routing
+            self.accuracy.begin_window(self.estimator.predict(),
+                                       self.serve.strategy)
             if self._last_migration:
                 tele["migration_entries"] = self._last_migration["entries"]
                 tele["migration_bytes"] = self._last_migration["bytes"]
@@ -549,7 +577,7 @@ class ContinuousEngine(_OverlapStoreMixin):
 
     def __init__(self, cfg: ModelConfig, params, ccfg: ContinuousConfig,
                  mesh=None, ep_ranks: int = 1, predictor=None,
-                 controller=None):
+                 controller=None, tracer=None):
         if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
             raise ValueError(f"{cfg.family}: continuous batching supports "
                              "uniform-stack decoder-only architectures")
@@ -569,6 +597,7 @@ class ContinuousEngine(_OverlapStoreMixin):
             _install_compile_listener()
         self.predictor = predictor
         self.controller = controller
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.strategy = ccfg.strategy
         self.predict_interval = ccfg.predict_interval
         self.iterations = 0
@@ -592,9 +621,12 @@ class ContinuousEngine(_OverlapStoreMixin):
             cfg = dataclasses.replace(cfg, moe=self.moe_cfg)
             self.estimator = DistributionEstimator(
                 cfg.num_layers, cfg.moe.num_experts, ema=ccfg.ema)
+            self.accuracy = PredictorAccuracyTracker(
+                cfg.num_layers, cfg.moe.num_experts)
         else:
             self.moe_cfg = None
             self.estimator = None
+            self.accuracy = None
             self._overlap = False
         self.cfg = cfg
         self.params = params
@@ -654,12 +686,14 @@ class ContinuousEngine(_OverlapStoreMixin):
             if self._overlap:
                 self._executor = LayerStagedExecutor(
                     self._migrate_fn, experts, self._store.entry_bytes,
-                    num_layers=cfg.num_layers, chunk=ccfg.migrate_chunk)
+                    num_layers=cfg.num_layers, chunk=ccfg.migrate_chunk,
+                    tracer=self.tracer)
             else:
                 self._executor = MigrationExecutor(
                     self._migrate_fn, experts, self._store.entry_bytes,
                     chunk=ccfg.migrate_chunk,
-                    chunks_per_tick=ccfg.migrate_chunks_per_step)
+                    chunks_per_tick=ccfg.migrate_chunks_per_step,
+                    tracer=self.tracer)
 
     # ------------------------------------------------------------------ plan
     def _identity_stack(self) -> Optional[PlacementPlan]:
@@ -756,6 +790,11 @@ class ContinuousEngine(_OverlapStoreMixin):
         stall = migration_stall_s(planned, self._hw())
         self.metrics.record_migration(replanned=True, planned_bytes=planned,
                                       stall_s=stall)
+        self.tracer.instant(
+            "plan.switch", cat="plan", track="plan",
+            args={"iteration": self.iterations, "strategy": self.strategy,
+                  "entries": int(diff.num_entries), "bytes": float(planned),
+                  "stall_us": stall * 1e6})
         if self._store is None or diff.num_entries == 0:
             # no store to fill, or the switch moves no weights (replica
             # routing tables can shrink without any slot changing expert);
@@ -781,6 +820,10 @@ class ContinuousEngine(_OverlapStoreMixin):
             # to "none"/identity never lands here: its diff is empty, so
             # the branch above cancels any in-flight migration first.
             self.metrics.record_migration(rejected=True)
+            self.tracer.instant(
+                "plan.reject", cat="plan", track="plan",
+                args={"iteration": self.iterations,
+                      "stall_us": stall * 1e6, "bytes": float(planned)})
             return self._plan_stack
         self._executor.begin(self._store.weights, diff, target)
         self._adopt_ticks = 0
@@ -918,6 +961,10 @@ class ContinuousEngine(_OverlapStoreMixin):
         # planned-vs-moved stays comparable for prebegun migrations)
         self.metrics.record_migration(prebegun=True, planned_bytes=planned,
                                       stall_s=stall)
+        self.tracer.instant(
+            "migration.prebegin", cat="migration", track="migration",
+            args={"iteration": self.iterations,
+                  "entries": int(diff.num_entries), "bytes": float(planned)})
 
     # ---------------------------------------------------------------- warmup
     def warmup(self):
@@ -1026,24 +1073,30 @@ class ContinuousEngine(_OverlapStoreMixin):
                 out[name] = -1
         return out
 
-    def profile_phases(self, iters: int = 3, impl: Optional[str] = None
-                       ) -> Dict[str, float]:
+    def profile_phases(self, iters: int = 3, impl: Optional[str] = None,
+                       tokens: Optional[int] = None) -> Dict[str, float]:
         """Measure the dispatch phase breakdown (route/pack/a2a/ffn/combine,
-        plus the ``migrate`` chunk-fill cost when duplication is on) at
-        this deployment's prefill shape. The breakdown is recorded into
-        ``metrics`` only when it profiles the ACTIVE ``dispatch_impl`` —
-        what-if runs with an ``impl`` override just return their numbers,
-        so repeated calls can't corrupt the reported phase columns.
-        Returns seconds per phase; ``migrate`` is NOT part of ``total``
-        (it is paid per plan switch, not per step)."""
+        plus the ``migrate`` chunk-fill cost when duplication is on).
+        ``tokens`` picks the shape (default: this deployment's prefill
+        bucket; pass ``max_slots`` for a decode-shaped profile). The
+        breakdown is recorded into ``metrics`` only when it profiles the
+        ACTIVE ``dispatch_impl`` and the phase columns are empty — what-if
+        runs with an ``impl`` override just return their numbers, and a
+        second shape must ``metrics.reset_phases()`` first, so repeated
+        calls can't silently double-accumulate the reported columns.
+        Every profile also lands as a sequence of retrospective spans on
+        the tracer's "dispatch-profile" track. Returns seconds per phase;
+        ``migrate`` is NOT part of ``total`` (it is paid per plan switch,
+        not per step)."""
         if not self.cfg.is_moe:
             return {}
         from repro.moe.profile import dispatch_phase_times, migrate_phase_time
         m = self.moe_cfg
+        tokens = tokens or self.ccfg.prefill_len
         phases = dispatch_phase_times(
             d_model=self.cfg.d_model, d_ff=m.d_ff_expert,
             num_experts=m.num_experts, top_k=m.top_k,
-            tokens=self.ccfg.prefill_len, ranks=self.ep_ranks,
+            tokens=tokens, ranks=self.ep_ranks,
             capacity_factor=m.capacity_factor,
             impl=impl or m.dispatch_impl, activation=self.cfg.activation,
             iters=iters)
@@ -1053,6 +1106,13 @@ class ContinuousEngine(_OverlapStoreMixin):
                 num_experts=m.num_experts, ranks=self.ep_ranks,
                 dup_slots=m.duplication_slots, layers=self.cfg.num_layers,
                 chunk=self.ccfg.migrate_chunk, iters=iters))
+        ts = None
+        for k in ("route", "pack", "a2a", "ffn", "combine", "migrate"):
+            if k in phases:
+                ts = self.tracer.add_span(
+                    k, phases[k], ts_ns=ts, cat="dispatch",
+                    track="dispatch-profile",
+                    args={"impl": impl or m.dispatch_impl, "tokens": tokens})
         if (impl is None or impl == m.dispatch_impl) \
                 and not self.metrics.phase_times:
             self.metrics.record_phases(phases)
@@ -1090,6 +1150,9 @@ class ContinuousEngine(_OverlapStoreMixin):
         iter_counts = None
         prefill_tokens = 0
         ctx = self.mesh or _nullcontext()
+        step_span = self.tracer.span("step",
+                                     args={"iteration": self.iterations})
+        step_span.__enter__()
         self._step_migration_bytes = 0.0
         self._step_migration_hidden_bytes = 0.0
         self._tick_migration()       # commit BEFORE this iteration's plan read
@@ -1097,10 +1160,18 @@ class ContinuousEngine(_OverlapStoreMixin):
         slot_w = self._store.weights if self._store is not None else None
         back_w, ready, tplan = self._overlap_args()
 
-        splan: IterationPlan = sched.schedule(now)
+        with self.tracer.span("admission") as adm:
+            splan: IterationPlan = sched.schedule(now)
+            adm.set_args(prefills=len(splan.prefills),
+                         decode_slots=len(splan.decode_slots),
+                         preempted=len(splan.preempted))
 
         # ---------------------------------------------------------- prefill
         for req in splan.prefills:
+            pf_span = self.tracer.span(
+                "prefill", args={"rid": req.rid,
+                                 "prompt_len": req.prompt_len})
+            pf_span.__enter__()
             slot = req.slot
             S = ccfg.prefill_len
             toks = np.zeros((1, S), np.int32)
@@ -1124,6 +1195,7 @@ class ContinuousEngine(_OverlapStoreMixin):
             prefill_tokens += req.prompt_len
             iter_counts = self._accumulate(iter_counts, stats)
             events.prefilled.append(req)
+            pf_span.__exit__()
 
         # ----------------------------------------------------------- finish
         # (requests whose whole budget was one token, or whose first token
@@ -1139,12 +1211,14 @@ class ContinuousEngine(_OverlapStoreMixin):
         if decode_slots:
             active = np.zeros((ccfg.max_slots, 1), np.float32)
             active[decode_slots] = 1.0
-            with ctx:
-                next_tok, _, self.pool, stats = self._decode_fn(
-                    self.params, jnp.asarray(self._last_tokens[:, None]),
-                    self.pool, jnp.asarray(sched.tables.tables),
-                    jnp.asarray(sched.tables.lengths), plan,
-                    jnp.asarray(active), slot_w, back_w, ready, tplan)
+            with self.tracer.span("decode",
+                                  args={"slots": len(decode_slots)}):
+                with ctx:
+                    next_tok, _, self.pool, stats = self._decode_fn(
+                        self.params, jnp.asarray(self._last_tokens[:, None]),
+                        self.pool, jnp.asarray(sched.tables.tables),
+                        jnp.asarray(sched.tables.lengths), plan,
+                        jnp.asarray(active), slot_w, back_w, ready, tplan)
             nt = np.asarray(next_tok)
             for slot in decode_slots:
                 req = sched.slots[slot]
@@ -1158,11 +1232,23 @@ class ContinuousEngine(_OverlapStoreMixin):
                 self._maybe_finish(slot, clock(), events)
 
         # ---------------------------------------------------------- observe
+        obs_span = self.tracer.span("observe")
+        obs_span.__enter__()
         self.iterations += 1
         if self.cfg.is_moe and iter_counts is not None:
             self.estimator.update(iter_counts)
-            if (self.strategy != "none"
-                    and self.iterations % self.predict_interval == 0):
+            self.accuracy.observe(iter_counts)
+            boundary = self.iterations % self.predict_interval == 0
+            if boundary:
+                # score the prediction the LAST re-plan boundary committed
+                # to against the window's realized routing
+                wa = self.accuracy.close_window()
+                if wa is not None:
+                    self.metrics.record_accuracy(wa.hit_rate, wa.kl)
+                    self.tracer.counter("pred_hit_rate", wa.hit_rate,
+                                        track="predictor")
+                    self.tracer.counter("pred_kl", wa.kl, track="predictor")
+            if self.strategy != "none" and boundary:
                 self.replan()
             elif (self._overlap and self.strategy != "none"
                   and self.ccfg.prefetch_lead > 0
@@ -1176,6 +1262,10 @@ class ContinuousEngine(_OverlapStoreMixin):
                 # the boundary re-plan finds the transfer already hidden
                 # under this window's forward compute
                 self._prebegin_migration()
+            if boundary:
+                self.accuracy.begin_window(
+                    self._predicted_dist() if self.strategy != "none"
+                    else None, self.strategy)
         decision = None
         if self.controller is not None and self.cfg.is_moe:
             decision = self.controller.observe(
@@ -1183,8 +1273,22 @@ class ContinuousEngine(_OverlapStoreMixin):
                 migration_bytes=self._step_migration_bytes,
                 migration_hidden_bytes=self._step_migration_hidden_bytes)
             if decision is not None:
+                self.tracer.instant(
+                    "gps.decision", cat="gps", track="gps",
+                    args={"recommended": decision.recommended,
+                          "strategy": decision.strategy,
+                          "skew": decision.skew,
+                          "volatility": decision.volatility,
+                          "switched": decision.switched,
+                          "predict_interval": decision.predict_interval})
+                self.tracer.counter("skew", decision.skew, track="gps")
+                if decision.switched:
+                    self.tracer.instant(
+                        "gps.switch", cat="gps", track="gps",
+                        args={"to": decision.strategy})
                 self._apply_decision(decision)
         events.decision = decision
+        obs_span.__exit__()
 
         dt = clock() - now
         self._recent_step_s = (dt if self._recent_step_s <= 0
@@ -1206,6 +1310,9 @@ class ContinuousEngine(_OverlapStoreMixin):
             ep_ranks=self.ep_ranks,
             dup_slots=self.moe_cfg.duplication_slots if self.moe_cfg else 0,
             strategy=self.strategy)
+        step_span.set_args(prefills=len(splan.prefills),
+                           decoded=len(decode_slots))
+        step_span.__exit__()
         return events
 
     # ----------------------------------------------------------- internals

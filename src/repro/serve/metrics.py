@@ -16,6 +16,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.placement import PlacementPlan, plan_dims
+from repro.obs.metrics import MetricsRegistry
 
 
 # ---------------------------------------------------------------------------
@@ -116,16 +117,25 @@ class WindowRecord:
     skew: float = 0.0
     imbalance: float = 1.0
     strategy: str = ""
+    # predictor accuracy of the prediction window(s) closing inside this
+    # metrics window (repro.obs.accuracy; nan until one closes)
+    pred_hit_rate: float = float("nan")
+    pred_kl: float = float("nan")
 
 
 class ServeMetrics:
     """Collects per-iteration + per-request events; summarises SLOs."""
 
     def __init__(self, window_iters: int = 16, slo_ttft: float = float("inf"),
-                 slo_tpot: float = float("inf")):
+                 slo_tpot: float = float("inf"),
+                 registry: Optional[MetricsRegistry] = None):
         self.window_iters = window_iters
         self.slo_ttft = slo_ttft
         self.slo_tpot = slo_tpot
+        # every summary() key is published here as a serve_* gauge, and
+        # per-request timings as histograms — scrape via
+        # registry.to_prometheus() / registry.to_jsonl()
+        self.registry = registry if registry is not None else MetricsRegistry()
         self.timings: List[RequestTiming] = []
         self.windows: List[WindowRecord] = []
         self.phase_times: Dict[str, float] = {}   # dispatch phase breakdown
@@ -197,6 +207,14 @@ class ServeMetrics:
         for k, v in phases.items():
             self.phase_times[k] = self.phase_times.get(k, 0.0) + float(v)
 
+    def reset_phases(self) -> Dict[str, float]:
+        """Clear the accumulated phase breakdown (returning the old one) so
+        a second profile — e.g. decode-shaped after prefill-shaped — starts
+        from zero instead of double-accumulating into the same columns."""
+        old = self.phase_times
+        self.phase_times = {}
+        return old
+
     # ----------------------------------------------------------- migration
     def record_migration(self, *, planned_bytes: float = 0.0,
                          bytes_moved: float = 0.0, stall_s: float = 0.0,
@@ -226,6 +244,34 @@ class ServeMetrics:
         self.timings.append(t)
         if self._win is not None:
             self._win.completions += 1
+        reg = self.registry
+        reg.counter("serve_requests_completed_total",
+                    "Requests that finished decoding").inc()
+        reg.histogram("serve_ttft_seconds",
+                      "Time to first token").observe(t.ttft)
+        if t.new_tokens > 1:
+            reg.histogram("serve_tpot_seconds",
+                          "Mean inter-token time per request").observe(t.tpot)
+        reg.histogram("serve_latency_seconds",
+                      "End-to-end request latency").observe(t.latency)
+
+    # ------------------------------------------------- predictor accuracy
+    def record_accuracy(self, hit_rate: float, kl: float) -> None:
+        """Attach the score of the prediction window that just closed to
+        the open (or latest) metrics window, so per-window rows carry the
+        predictor-accuracy columns next to skew/imbalance."""
+        w = self._win if self._win is not None else \
+            (self.windows[-1] if self.windows else None)
+        if w is not None:
+            w.pred_hit_rate = float(hit_rate)
+            w.pred_kl = float(kl)
+        reg = self.registry
+        reg.gauge("serve_pred_hit_rate",
+                  "Predictor top-1 hot-expert hit rate, last closed "
+                  "prediction window").set(float(hit_rate))
+        reg.gauge("serve_pred_kl",
+                  "KL(realized || predicted), last closed prediction "
+                  "window").set(float(kl))
 
     # -------------------------------------------------------------- summary
     def summary(self) -> Dict[str, float]:
@@ -241,7 +287,7 @@ class ServeMetrics:
         phase_cols = {f"phase_{k}_us": v * 1e6
                       for k, v in self.phase_times.items()}
         mig = self.migration
-        return {
+        out = {
             **phase_cols,
             "migration_planned_bytes": mig["planned_bytes"],
             "migration_bytes_moved": mig["bytes_moved"],
@@ -263,6 +309,13 @@ class ServeMetrics:
             "goodput_req_s": len(good) / horizon,
             "preemptions": float(sum(t.n_preemptions for t in ts)),
         }
+        # publish every summary column through the registry so the same
+        # numbers are scrapeable (Prometheus text / JSONL) without a second
+        # hand-rolled aggregation path
+        for k, v in out.items():
+            self.registry.gauge(
+                f"serve_{k}", f"ServeMetrics summary column {k}").set(v)
+        return out
 
     def imbalance_over_time(self) -> List[float]:
         return [w.imbalance for w in self.windows]

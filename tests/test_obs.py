@@ -1,0 +1,376 @@
+"""Observability subsystem tests (repro.obs): span tracer nesting /
+ring-buffer overflow / Chrome trace-event round-trip, metrics registry
+exporters, ServeMetrics registry integration + reset_phases guard, GPS
+audit records (verdict inputs match what ``recommend_strategy`` saw), and
+the predictor-accuracy tracker."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.obs import (GPSAuditLog, MetricsRegistry, NULL_TRACER,
+                       PredictorAccuracyTracker, SpanTracer, hist_hit_rate,
+                       hist_kl, hist_l1, merge_traces, span_names,
+                       validate_chrome_trace)
+from repro.serve import ControllerConfig, OnlineGPSController
+from repro.serve.metrics import RequestTiming, ServeMetrics
+
+
+# --------------------------------------------------------------------------
+# span tracer
+# --------------------------------------------------------------------------
+
+def test_span_nesting_containment():
+    tr = SpanTracer()
+    with tr.span("outer"):
+        with tr.span("inner"):
+            pass
+    evs = tr.events()
+    assert [e[1] for e in evs] == ["inner", "outer"]   # exit order
+    (_, _, _, ts_i, dur_i, tid_i, _), (_, _, _, ts_o, dur_o, tid_o, _) = evs
+    assert tid_i == tid_o                              # same thread row
+    assert ts_o <= ts_i and ts_i + dur_i <= ts_o + dur_o   # containment
+
+
+def test_ring_buffer_overflow_counts_drops():
+    tr = SpanTracer(capacity=4)
+    for i in range(10):
+        tr.instant(f"e{i}")
+    evs = tr.events()
+    assert len(evs) == 4 and tr.dropped == 6
+    assert [e[1] for e in evs] == ["e6", "e7", "e8", "e9"]   # oldest first
+    assert tr.to_chrome()["otherData"]["dropped_events"] == 6
+
+
+def test_chrome_trace_round_trip_schema(tmp_path):
+    tr = SpanTracer(process_name="test-proc")
+    with tr.span("work", args={"k": 1}):
+        tr.instant("mark", track="side")
+        tr.counter("load", 0.5, track="side")
+    path = tmp_path / "trace.json"
+    tr.export(str(path), extra={"run": "x"})
+    doc = json.loads(path.read_text())
+    assert validate_chrome_trace(doc) == []
+    assert {"work", "mark", "load"} <= span_names(doc)
+    assert doc["otherData"]["run"] == "x"
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M"}
+    assert {"test-proc", "side"} <= names       # process + track metadata
+    x = [e for e in doc["traceEvents"] if e["ph"] == "X"][0]
+    assert x["dur"] >= 1 and x["ts"] >= 0 and x["args"] == {"k": 1}
+
+
+def test_disabled_tracer_records_nothing():
+    tr = SpanTracer(enabled=False)
+    with tr.span("x") as sp:
+        sp.set_args(a=1)                          # no-op, must not raise
+    tr.instant("y")
+    tr.counter("z", 1.0)
+    tr.add_span("w", 0.1)
+    assert tr.events() == [] and NULL_TRACER.events() == []
+
+
+def test_retrospective_spans_lay_out_sequentially():
+    tr = SpanTracer()
+    end = tr.add_span("a", 0.001, track="profile")
+    tr.add_span("b", 0.002, ts_ns=end, track="profile")
+    a, b = tr.events()
+    assert b[3] == a[3] + a[4]                   # b starts where a ended
+
+
+def test_merge_traces_rekeys_pids():
+    t1, t2 = SpanTracer(process_name="p1"), SpanTracer(process_name="p2")
+    t1.instant("a")
+    t2.instant("b")
+    doc = merge_traces([t1.to_chrome(), t2.to_chrome()], names=["one", "two"])
+    assert validate_chrome_trace(doc) == []
+    assert {e["pid"] for e in doc["traceEvents"]} == {1, 2}
+    assert {e["args"]["name"] for e in doc["traceEvents"]
+            if e.get("name") == "process_name"} == {"one", "two"}
+
+
+def test_validator_rejects_malformed_docs():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({}) != []
+    bad = {"traceEvents": [{"ph": "Q", "name": "x"},
+                           {"ph": "X", "name": "x", "ts": -5, "dur": 1,
+                            "pid": 1, "tid": 1},
+                           {"ph": "X", "name": "x", "ts": 1, "pid": 1,
+                            "tid": 1}]}    # bad phase / neg ts / missing dur
+    errs = validate_chrome_trace(bad)
+    assert len(errs) == 3
+
+
+def test_validate_cli(tmp_path):
+    from repro.obs.validate import main
+    tr = SpanTracer()
+    tr.instant("present")
+    good = tmp_path / "good.json"
+    tr.export(str(good))
+    assert main([str(good)]) == 0
+    assert main([str(good), "--require", "present"]) == 0
+    assert main([str(good), "--require", "absent"]) == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text("[1, 2]")
+    assert main([str(bad)]) == 1
+
+
+# --------------------------------------------------------------------------
+# metrics registry
+# --------------------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests").inc()
+    reg.counter("req_total", "requests").inc(2)
+    with pytest.raises(ValueError):
+        reg.counter("req_total", "x").inc(-1)
+    reg.gauge("depth", "queue depth").set(7)
+    h = reg.histogram("lat_s", "latency", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["req_total"] == 3.0 and snap["depth"] == 7.0
+    assert snap["lat_s_count"] == 3.0
+    assert snap["lat_s_sum"] == pytest.approx(5.55)
+
+
+def test_registry_labels_and_type_conflicts():
+    reg = MetricsRegistry()
+    reg.counter("tok", "tokens", phase="prefill").inc(5)
+    reg.counter("tok", "tokens", phase="decode").inc(2)
+    assert reg.counter("tok", "tokens", phase="prefill").value == 5.0
+    with pytest.raises(ValueError):
+        reg.gauge("tok", "tokens")               # name already a counter
+
+
+def test_prometheus_text_format():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests served", tenant="a").inc(4)
+    reg.histogram("lat_s", "latency", buckets=(1.0,)).observe(0.5)
+    text = reg.to_prometheus()
+    assert "# HELP req_total requests served" in text
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{tenant="a"} 4' in text
+    assert 'lat_s_bucket{le="1.0"} 1' in text
+    assert 'lat_s_bucket{le="+Inf"} 1' in text
+    assert "lat_s_count 1" in text
+
+
+def test_registry_jsonl_export(tmp_path):
+    reg = MetricsRegistry()
+    reg.gauge("x", "x").set(1.5)
+    path = tmp_path / "m.jsonl"
+    reg.to_jsonl(str(path), extra={"step": 1})
+    reg.gauge("x", "x").set(2.5)
+    reg.to_jsonl(str(path), extra={"step": 2})
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(lines) == 2
+    assert all(l["metric"] == "x" and l["type"] == "gauge" for l in lines)
+    assert lines[0]["value"] == 1.5 and lines[1]["value"] == 2.5
+    assert lines[1]["step"] == 2
+
+
+# --------------------------------------------------------------------------
+# ServeMetrics integration
+# --------------------------------------------------------------------------
+
+def test_serve_metrics_publishes_registry():
+    m = ServeMetrics(window_iters=2)
+    m.record_completion(RequestTiming(rid=0, arrival=0.0, t_first_token=0.2,
+                                      t_finished=1.0, prompt_len=8,
+                                      new_tokens=5))
+    m.record_iteration(0.0, 0.1, prefill_tokens=8, decode_tokens=0,
+                       counts=None, plan=None, ep_ranks=1, dup_slots=0)
+    s = m.summary()
+    snap = m.registry.snapshot()
+    assert snap["serve_requests_completed_total"] == 1.0
+    assert snap["serve_ttft_seconds_count"] == 1.0
+    assert snap["serve_completed"] == s["completed"] == 1.0
+    assert snap["serve_ttft_p50"] == pytest.approx(s["ttft_p50"])
+    assert "serve_completed" in m.registry.to_prometheus()
+
+
+def test_reset_phases_guards_double_accumulation():
+    m = ServeMetrics()
+    m.record_phases({"route": 1e-3, "total": 2e-3})
+    m.record_phases({"route": 1e-3, "total": 2e-3})   # accumulates by design
+    assert m.phase_times["route"] == pytest.approx(2e-3)
+    old = m.reset_phases()
+    assert old["route"] == pytest.approx(2e-3)
+    assert m.phase_times == {}
+    m.record_phases({"route": 5e-4, "total": 1e-3})   # fresh shape, clean
+    assert m.summary()["phase_route_us"] == pytest.approx(500.0)
+
+
+def test_record_accuracy_lands_on_window():
+    m = ServeMetrics(window_iters=2)
+    m.record_iteration(0.0, 0.1, prefill_tokens=1, decode_tokens=0,
+                       counts=None, plan=None, ep_ranks=1, dup_slots=0)
+    m.record_accuracy(0.75, 0.1)
+    m.record_iteration(0.1, 0.1, prefill_tokens=0, decode_tokens=1,
+                       counts=None, plan=None, ep_ranks=1, dup_slots=0)
+    assert m.windows[0].pred_hit_rate == pytest.approx(0.75)
+    assert m.windows[0].pred_kl == pytest.approx(0.1)
+    assert m.registry.snapshot()["serve_pred_hit_rate"] == 0.75
+
+
+# --------------------------------------------------------------------------
+# GPS decision audit
+# --------------------------------------------------------------------------
+
+def _counts_with_skew(L, E, skew, total=4096.0):
+    p_max = skew / E
+    rest = (1.0 - p_max) / (E - 1)
+    p = np.full((E,), rest)
+    p[0] = p_max
+    return np.tile(p * total, (L, 1))
+
+
+def test_audit_records_exact_recommend_inputs(monkeypatch):
+    """Every audited input must be the value recommend_strategy actually
+    received — capture the real call and compare field by field."""
+    import repro.serve.controller as ctl_mod
+    seen = {}
+    real = ctl_mod.recommend_strategy
+
+    def spy(model_cfg, hw, **kw):
+        seen.update(kw)
+        return real(model_cfg, hw, **kw)
+
+    monkeypatch.setattr(ctl_mod, "recommend_strategy", spy)
+    full = get_config("mixtral-8x7b")
+    ctl = OnlineGPSController(
+        full, ControllerConfig(window_iters=1, patience=1,
+                               skew_cap_observed=2.0, skew_cap_target=4.0),
+        predictor_available=True, initial_strategy="dist_only")
+    d = ctl.observe(_counts_with_skew(full.num_layers, 4, 1.9), 1.0,
+                    migration_bytes=1e6, migration_hidden_bytes=5e5)
+    assert d is not None and len(ctl.audit) == 1
+    rec = ctl.audit.records[0]
+    assert rec.skew_input == pytest.approx(seen["skew"])
+    assert rec.skew_input != pytest.approx(rec.skew_measured)  # transferred
+    assert rec.batch == seen["batch"] and rec.seq_len == seen["seq"]
+    assert rec.allow_t2e == seen["allow_t2e"]
+    assert rec.min_saving == pytest.approx(seen["min_saving"])
+    assert rec.migration_stall_s == pytest.approx(seen["migration_stall_s"])
+    assert rec.migration_bytes == pytest.approx(1e6)
+    assert rec.migration_hidden_frac == pytest.approx(0.5)
+    assert rec.recommended == d.recommended
+    assert rec.strategy_after == d.strategy
+    assert rec.gate == ("switched" if d.switched else "pending")
+    assert rec.baseline_total_s > 0 and "=>" in rec.explain()
+
+
+def test_audit_gate_tracks_hysteresis():
+    full = get_config("mixtral-8x7b")
+    ctl = OnlineGPSController(
+        full, ControllerConfig(window_iters=1, patience=2),
+        predictor_available=True, initial_strategy="dist_only")
+    L, E = full.num_layers, full.moe.num_experts
+    ctl.observe(_counts_with_skew(L, E, 3.2), 1.0)
+    ctl.observe(_counts_with_skew(L, E, 3.2), 2.0)
+    gates = [r.gate for r in ctl.audit.records]
+    assert gates == ["pending", "switched"]
+    assert len(ctl.audit.switches) == 1
+    assert ctl.audit.summary()["gps_verdicts"] == 2.0
+
+
+def test_audit_log_bounded(tmp_path):
+    log = GPSAuditLog(maxlen=2)
+    full = get_config("mixtral-8x7b")
+    ctl = OnlineGPSController(
+        full, ControllerConfig(window_iters=1, patience=1),
+        predictor_available=False, audit=log)
+    for t in range(4):
+        ctl.observe(_counts_with_skew(full.num_layers,
+                                      full.moe.num_experts, 1.5), float(t))
+    assert len(log) == 2 and log.dropped == 2
+    assert log.records[-1].seq == 3                 # seq survives eviction
+    path = tmp_path / "audit.jsonl"
+    log.to_jsonl(str(path))
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(lines) == 2 and lines[-1]["seq"] == 3
+
+
+# --------------------------------------------------------------------------
+# predictor accuracy
+# --------------------------------------------------------------------------
+
+def test_hist_scores_perfect_and_wrong():
+    p = np.array([[0.7, 0.2, 0.1], [0.6, 0.3, 0.1]])
+    assert hist_hit_rate(p, p) == 1.0
+    assert hist_kl(p, p) == pytest.approx(0.0, abs=1e-6)
+    assert hist_l1(p, p) == pytest.approx(0.0, abs=1e-6)
+    wrong = p[:, ::-1]
+    assert hist_hit_rate(p, wrong) == 0.0
+    assert hist_kl(p, wrong) > 0.1
+
+
+def test_accuracy_tracker_windows_and_modes():
+    tr = PredictorAccuracyTracker(num_layers=2, num_experts=3)
+    pred = np.array([[0.7, 0.2, 0.1], [0.6, 0.3, 0.1]])
+    # window 1: dist_only, realized matches the prediction
+    tr.begin_window(pred, "dist_only")
+    tr.observe(pred * 100)
+    tr.observe(None)                                # MoE-less iteration
+    w = tr.close_window()
+    assert w.hit_rate == 1.0 and w.tokens == pytest.approx(200.0)
+    # window 2: token_to_expert, realized argmax disagrees everywhere
+    tr.begin_window(pred, "token_to_expert")
+    tr.observe(pred[:, ::-1] * 100)
+    assert tr.close_window().hit_rate == 0.0
+    # window 3: no prediction (strategy none) -> not scored
+    tr.begin_window(None, "none")
+    tr.observe(pred * 100)
+    assert tr.close_window() is None
+    # window 4: prediction but zero routed tokens -> not scored
+    tr.begin_window(pred, "dist_only")
+    assert tr.close_window() is None
+    s = tr.summary()
+    assert s["pred_windows"] == 2.0
+    assert s["pred_hit_rate"] == pytest.approx(0.5)
+    assert s["pred_dist_hit_rate"] == 1.0
+    assert s["pred_t2e_hit_rate"] == 0.0
+    assert len(tr.to_obj()) == 2
+
+
+# --------------------------------------------------------------------------
+# migration executor tracing
+# --------------------------------------------------------------------------
+
+def test_executor_emits_migration_spans():
+    import jax.numpy as jnp
+    from repro.core.placement import identity_plan, stack_plans
+    from repro.runtime import (MigrationExecutor, make_migrate_step,
+                               plan_diff)
+    from repro.core.duplication import duplicate_experts_host
+
+    E, R, S, L = 4, 2, 1, 2
+    experts = {"w": jnp.arange(L * E * 3, dtype=jnp.float32
+                               ).reshape(L, E, 3)}
+    step = make_migrate_step(None, num_experts=E, ep_ranks=R, dup_slots=S)
+    ident = stack_plans([identity_plan(E, R, S, 2) for _ in range(L)])
+    dist = np.array([[0.7, 0.1, 0.1, 0.1]] * L)
+    target = stack_plans([
+        duplicate_experts_host(dist[l], R, S, 2).plan for l in range(L)])
+    diff = plan_diff(ident, target, R, S)
+    assert diff.num_entries > 0
+    n_slots = E // R + S
+    weights = {"w": jnp.zeros((L, R * n_slots, 3))}
+
+    tr = SpanTracer()
+    ex = MigrationExecutor(step, experts, 128, chunk=1, tracer=tr)
+    ex.begin(weights, diff, target)
+    while ex.active:
+        ex.tick(budget=1)
+    names = [e[1] for e in tr.events()]
+    assert "migration.begin" in names
+    assert names.count("migration.tick") >= 1
+    assert names[-1] == "migration.commit"
+    assert "migration.cancel" not in names          # commit is not a cancel
+    ex.begin(weights, diff, target)
+    ex.cancel()
+    assert [e[1] for e in tr.events()][-1] == "migration.cancel"
