@@ -12,14 +12,13 @@ from __future__ import annotations
 
 import os
 
-import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core.gps import T2EPoint, run_gps
 from repro.core.predictors import (ConditionalProbabilityModel, FFNPredictor,
                                    LSTMPredictor, ProbabilityModel, accuracy)
 from repro.core.simulator import A100_NVLINK, attention_flops, \
-    dense_ffn_flops_per_token, ffn_flops_per_token
+    ffn_flops_per_token
 from repro.data.synthetic import make_routing_trace
 
 E, L, V, S = 8, 4, 2048, 128

@@ -48,7 +48,6 @@ import textwrap
 import time
 
 import jax
-import numpy as np
 
 
 def _smoke() -> bool:

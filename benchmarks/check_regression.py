@@ -4,10 +4,15 @@ Usage:
   python -m benchmarks.check_regression BENCH_smoke.json \
       [--baseline benchmarks/baseline.json] [--tol 0.25]
 
-Compares a fresh ``benchmarks/run.py --smoke --json`` document against the
-committed baseline and FAILS (exit 1) when:
+QUALITATIVE regression gate: checks the invariants that must hold on any
+machine (wall-time and per-metric bands live in
+``benchmarks/check_trend.py`` against ``benchmarks/references.json``).
+Compares a fresh ``benchmarks/run.py --smoke --json`` document against
+the committed baseline and FAILS (exit 1) when:
 
-  * total smoke wall time regressed by more than ``--tol`` (default 25%),
+  * the current document is structurally empty (missing/empty ``benches``
+    or no positive ``total_wall_s`` — a truncated or failed run must
+    never read as a pass),
   * any bench that passed in the baseline now fails,
   * the dispatch bench's measured pack speedup fell below 1.0 (the sort
     hot path must never be slower than the one-hot oracle it replaced),
@@ -33,16 +38,28 @@ import os
 import sys
 
 
-def compare(current: dict, baseline: dict, tol: float) -> list:
-    """Returns a list of human-readable failures (empty = gate passes)."""
+def structurally_empty(doc: dict) -> list:
+    """Failures for a truncated/failed document. A run that crashed before
+    writing any bench (``"benches": {}`` and no ``total_wall_s``) used to
+    sail through every per-bench comparison and exit 0; an empty document
+    must be a loud failure, never a pass."""
     failures = []
-    base_total = baseline.get("total_wall_s", 0.0)
-    cur_total = current.get("total_wall_s", 0.0)
-    if base_total > 0 and cur_total > base_total * (1.0 + tol):
-        failures.append(
-            f"total smoke wall time regressed: {cur_total:.1f}s vs baseline "
-            f"{base_total:.1f}s (+{100 * (cur_total / base_total - 1):.0f}%, "
-            f"tolerance {100 * tol:.0f}%)")
+    if not isinstance(doc.get("benches"), dict) or not doc.get("benches"):
+        failures.append("document is structurally empty: no benches "
+                        "recorded (truncated or failed run)")
+    total = doc.get("total_wall_s")
+    if not isinstance(total, (int, float)) or total <= 0:
+        failures.append("document has no positive total_wall_s "
+                        f"(got {total!r})")
+    return failures
+
+
+def compare(current: dict, baseline: dict, tol: float = 0.0) -> list:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    failures = structurally_empty(current)
+    if structurally_empty(baseline):
+        failures.append("committed baseline is structurally empty — "
+                        "refresh it from a healthy run")
     for name, base_rec in baseline.get("benches", {}).items():
         cur_rec = current.get("benches", {}).get(name)
         if cur_rec is None:
@@ -127,6 +144,13 @@ def main(argv=None) -> int:
         current = json.load(f)
 
     if os.environ.get("REPRO_BENCH_REFRESH_BASELINE") == "1":
+        empty = structurally_empty(current)
+        if empty:
+            print("refusing to refresh the baseline from a broken "
+                  "document:", file=sys.stderr)
+            for msg in empty:
+                print(f"  - {msg}", file=sys.stderr)
+            return 1
         with open(baseline_path, "w") as f:
             json.dump(current, f, indent=2)
         print(f"baseline refreshed from {argv[0]} -> {baseline_path} "

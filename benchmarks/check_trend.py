@@ -1,0 +1,131 @@
+"""CI per-metric perf-reference gate + trend report (ReFrame-style).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.check_trend BENCH_smoke.json \
+      [--references benchmarks/references.json] \
+      [--history benchmarks/history.jsonl] [--last 8] [--markdown OUT.md]
+
+Replaces the old single >25%-total-wall-time tolerance: every metric
+named in ``benchmarks/references.json`` is gated against its own
+``[ref, lower_tol, upper_tol]`` band (null = that side unbounded;
+``repro.sweep.references`` documents the format), structurally empty
+documents fail loudly, and the trend database is scanned for monotonic
+drift across the last N entries (reported, not gated — drift inside the
+band is a warning, not a regression).
+
+``--markdown`` writes the gate table + trend table as markdown (CI
+appends it to the GitHub Actions job summary).
+
+Refresh path: REPRO_BENCH_REFRESH_REFERENCES=1 rewrites references.json
+from the current document using per-metric-class default tolerances
+(commit the refreshed file). Refreshing from an empty document is
+refused.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _import_sweep():
+    try:
+        from repro.sweep import history, references, report
+    except ImportError as e:
+        print(f"cannot import repro.sweep ({e}); run with PYTHONPATH=src",
+              file=sys.stderr)
+        raise SystemExit(2)
+    return history, references, report
+
+
+def main(argv=None) -> int:
+    history, references, report_mod = _import_sweep()
+    argv = list(sys.argv[1:] if argv is None else argv)
+    refs_path = os.path.join(os.path.dirname(__file__), "references.json")
+    history_path = os.path.join(os.path.dirname(__file__), "history.jsonl")
+    last_n, md_path = 8, ""
+    for flag, setter in (("--references", "refs"), ("--history", "hist"),
+                         ("--last", "last"), ("--markdown", "md")):
+        if flag in argv:
+            i = argv.index(flag)
+            try:
+                val = argv[i + 1]
+            except IndexError:
+                print(f"{flag} requires an argument", file=sys.stderr)
+                return 2
+            if setter == "refs":
+                refs_path = val
+            elif setter == "hist":
+                history_path = val
+            elif setter == "last":
+                last_n = int(val)
+            else:
+                md_path = val
+            del argv[i:i + 2]
+    if len(argv) != 1:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        current = json.load(f)
+
+    if os.environ.get("REPRO_BENCH_REFRESH_REFERENCES") == "1":
+        refs = references.refresh_references(current)
+        with open(refs_path, "w") as f:
+            json.dump(refs, f, indent=2)
+        n = sum(len(v) for v in refs["benches"].values()) + 1
+        print(f"references refreshed from {argv[0]} -> {refs_path} "
+              f"({n} metric bands; commit the updated file)")
+        return 0
+
+    if not os.path.exists(refs_path):
+        print(f"no references at {refs_path}; run with "
+              "REPRO_BENCH_REFRESH_REFERENCES=1 to create them",
+              file=sys.stderr)
+        return 2
+    with open(refs_path) as f:
+        refs = json.load(f)
+
+    failures, checked = references.gate_document(current, refs)
+    if checked == 0:
+        failures.append("references file declares zero metric bands")
+
+    entries = history.load_history(history_path)
+    smap = history.series(entries)
+    warns = report_mod.drift_warnings(smap, last_n=last_n)
+
+    print(f"per-metric reference gate: {checked} bands checked, "
+          f"{len(failures)} violations, {len(warns)} drift warnings "
+          f"({len(entries)} history entries)")
+    for w in warns:
+        print(f"  drift: {w}")
+
+    if md_path:
+        lines = ["## Perf-reference gate",
+                 f"_{checked} metric bands checked against "
+                 f"`{os.path.basename(refs_path)}`_", ""]
+        if failures:
+            lines.append("**GATE FAILED:**")
+            lines += [f"- ❌ {m}" for m in failures]
+        else:
+            lines.append("✅ every metric inside its reference band")
+        lines += ["", report_mod.render_report(
+            history_path, refs_path, last_n=last_n)]
+        with open(md_path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"wrote {md_path}")
+
+    if failures:
+        print("\nPER-METRIC REFERENCE GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        print("  (deliberate change? refresh with "
+              "REPRO_BENCH_REFRESH_REFERENCES=1 and commit "
+              "references.json)", file=sys.stderr)
+        return 1
+    print("per-metric reference gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

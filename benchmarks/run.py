@@ -24,9 +24,12 @@ Benches whose ``run()`` returns a dict of scalars as its first element get
 that dict embedded as ``summary``. ``benchmarks/bench_dispatch`` also
 emits its own ``BENCH_dispatch.json`` phase-breakdown artifact.
 
-``--history PATH``: append one compact JSONL line (meta + total wall +
-per-bench wall/ok) per run — a durable measurement trajectory across
-commits (CI appends to ``benchmarks/history.jsonl`` and uploads it).
+``--history PATH``: append one JSONL line (``kind: "bench"``; meta +
+total wall + per-bench wall/ok/summary metrics) per run — the trend
+database ``repro.sweep.history`` reads back as per-(bench, metric,
+config-key) series and ``benchmarks/check_trend.py`` scans for drift
+(CI appends to ``benchmarks/history.jsonl`` and uploads it; sweep jobs
+append ``kind: "sweep"`` lines to the same file).
 """
 
 from __future__ import annotations
@@ -166,15 +169,11 @@ def main(argv=None) -> int:
             json.dump(doc, f, indent=2)
         print(f"wrote {json_path}")
     if history_path:
-        line = {
-            **meta,
-            "smoke": os.environ.get("REPRO_BENCH_SMOKE") == "1",
-            "total_wall_s": total_wall_s,
-            "benches": {n: {"wall_us": r["wall_us"], "ok": r["ok"]}
-                        for n, r in records.items()},
-        }
-        with open(history_path, "a") as f:
-            f.write(json.dumps(line) + "\n")
+        from repro.sweep.history import append_entry, bench_history_entry
+        doc = {"smoke": os.environ.get("REPRO_BENCH_SMOKE") == "1",
+               "total_wall_s": total_wall_s, "meta": meta,
+               "benches": records}
+        append_entry(history_path, bench_history_entry(doc))
         print(f"appended history to {history_path}")
     return 1 if failures else 0
 

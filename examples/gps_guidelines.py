@@ -9,7 +9,6 @@ deepseek-v2-lite-16b) through MoE-GPS on the TPU v5e production target.
 
 import argparse
 
-import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core.gps import run_gps

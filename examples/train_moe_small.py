@@ -9,7 +9,6 @@ skew the paper's predictors consume), and checkpointing.
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax

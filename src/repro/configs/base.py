@@ -11,7 +11,7 @@ lowered via ShapeDtypeStruct in the dry-run.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

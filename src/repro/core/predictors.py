@@ -24,7 +24,7 @@ can convert accuracy into runtime overhead analytically.
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

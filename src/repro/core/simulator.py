@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ModelConfig
 from repro.core.balance import bottleneck_factor, comm_factor

@@ -74,7 +74,6 @@ def main(argv=None) -> int:
                          tracer=tracer)
 
     sched = BatchScheduler(args.batch, args.seq)
-    rng = np.random.default_rng(args.seed)
     gen = token_batches(args.seed, cfg.vocab_size, 1, args.seq)
     for rid in range(args.requests):
         toks = next(gen)["tokens"][0]

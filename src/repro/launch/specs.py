@@ -8,9 +8,8 @@ would pass — the shannon/kernels dry-run pattern.
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,6 @@ Decode (Sq == 1) attends directly over the cache.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

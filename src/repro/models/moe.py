@@ -11,7 +11,7 @@ Two execution paths share one parameter layout:
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ MoE layers run one of three paths, selected by ``Runtime``:
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

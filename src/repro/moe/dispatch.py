@@ -32,7 +32,6 @@ communication grows with the error rate exactly as the paper models.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
-from repro.models.layers import init_dense, truncated_normal_init
+from repro.models.layers import truncated_normal_init
 
 
 class RouterOutput(NamedTuple):

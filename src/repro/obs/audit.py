@@ -14,7 +14,7 @@ be replayed and every switch — or refusal to switch — justified.
 from __future__ import annotations
 
 import json
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 from typing import Any, Dict, List, Optional
 
 

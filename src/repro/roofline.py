@@ -23,7 +23,7 @@ from __future__ import annotations
 import json
 import re
 from dataclasses import asdict, dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
 # --------------------------------------------------------------------------
 # hardware constants (TPU v5e)

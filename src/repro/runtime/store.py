@@ -14,7 +14,7 @@ weights per rank — the price of serving steps that never re-gather.
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

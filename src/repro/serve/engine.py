@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,7 @@ from repro.configs.base import ModelConfig
 from repro.core.duplication import duplicate_experts_host
 from repro.core.placement import PlacementPlan, identity_plan, stack_plans
 from repro.core.predictors import DistributionEstimator
-from repro.models.transformer import Runtime, forward, init_cache
+from repro.models.transformer import Runtime, init_cache
 from repro.obs.accuracy import PredictorAccuracyTracker
 from repro.obs.trace import NULL_TRACER
 from repro.serve.kvcache import (BlockAllocator, init_block_pool,

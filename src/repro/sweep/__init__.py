@@ -1,0 +1,32 @@
+"""Declarative (config x mesh x workload x strategy) sweep harness.
+
+ReFrame-style regression tracking for the serving stack: a sweep spec
+expands into jobs (``matrix``), each job runs a ContinuousEngine
+deployment in a subprocess EP mesh (``job``/``runner``) or is emitted as
+a k8s Job manifest for cluster runs (``k8s``), per-job metrics land in a
+trend database (``history``) and gate against committed per-metric
+reference bands (``references``), rendered as a markdown trend table
+(``report``).
+
+  PYTHONPATH=src python -m repro.sweep run --smoke
+  PYTHONPATH=src python -m repro.sweep report
+  PYTHONPATH=src python -m repro.sweep manifests --out-dir k8s/
+"""
+
+from repro.sweep.history import (append_entry, bench_history_entry,
+                                 load_history, series, sweep_history_entry,
+                                 trend)
+from repro.sweep.k8s import job_manifest, manifest_name, validate_manifest
+from repro.sweep.matrix import (FULL_SPEC, SMOKE_SPEC, MeshShape, SweepPoint,
+                                SweepSpec, parse_mesh)
+from repro.sweep.references import (check_metric, gate_document,
+                                    refresh_references)
+from repro.sweep.report import render_report, trend_table
+
+__all__ = [
+    "FULL_SPEC", "MeshShape", "SMOKE_SPEC", "SweepPoint", "SweepSpec",
+    "append_entry", "bench_history_entry", "check_metric", "gate_document",
+    "job_manifest", "load_history", "manifest_name", "parse_mesh",
+    "refresh_references", "render_report", "series", "sweep_history_entry",
+    "trend", "trend_table", "validate_manifest",
+]

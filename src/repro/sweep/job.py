@@ -1,0 +1,178 @@
+"""One sweep point, run in-process: build the engine on the requested
+mesh, replay the workload trace, print a single JSON result line.
+
+Invoked by the runner as a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=<devices>`` already in
+the environment (it must be set before jax first initialises, which is
+why this module is never imported by the runner):
+
+  XLA_FLAGS=... PYTHONPATH=src python -m repro.sweep.job \
+      --point '{"arch": "mixtral-8x7b", "mesh": "1x4", ...}' --smoke
+
+The last stdout line is the job document the runner collects; everything
+else (engine chatter, XLA warnings) goes to stderr or earlier lines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.sweep.matrix import SweepPoint
+
+# Engine shape for sweep deployments (static: the same compiled program
+# serves every workload of a point, so cross-point step times compare).
+SMOKE_ENGINE = dict(max_slots=4, prefill_len=32, block_size=16, max_len=48,
+                    predict_interval=4, dup_slots=1, metrics_window=4)
+FULL_ENGINE = dict(max_slots=8, prefill_len=64, block_size=16, max_len=96,
+                   predict_interval=4, dup_slots=1, metrics_window=8)
+
+# Virtual-clock trace horizon per tier (seconds) and replay compression.
+SMOKE_TRACE = dict(horizon=10.0, rate=1.5, time_scale=20.0, max_iters=40)
+FULL_TRACE = dict(horizon=45.0, rate=1.5, time_scale=20.0, max_iters=400)
+
+# Summary columns copied into the job's metric set (flat scalars only —
+# these are the per-(metric, config-key) trend series).
+SUMMARY_METRICS = (
+    "completed", "preemptions", "throughput_tok_s", "throughput_req_s",
+    "ttft_p50", "ttft_p99", "tpot_mean", "tpot_p99", "latency_p50",
+    "latency_p99", "migration_replans", "migration_bytes_moved",
+    "migration_stall_us", "migration_rejected",
+)
+
+
+def run_point(point: SweepPoint, *, smoke: bool = True, trace_out: str = "",
+              max_iters: int = 0, time_scale: float = 0.0) -> dict:
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_dev_mesh
+    from repro.models.transformer import init_model
+    from repro.obs import SpanTracer
+    from repro.serve import ContinuousConfig, ContinuousEngine
+    from repro.sweep.workloads import build_workload
+    from repro.workloads import to_serve_requests
+
+    cfg = get_config(point.arch)
+    if point.reduced:
+        cfg = cfg.reduced()
+
+    mesh, ep_ranks = None, point.mesh.model
+    if point.mesh.devices > 1:
+        if jax.device_count() < point.mesh.devices:
+            raise RuntimeError(
+                f"point {point.key} needs {point.mesh.devices} devices, "
+                f"have {jax.device_count()} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={point.mesh.devices}"
+                " before jax initialises)")
+        mesh = make_dev_mesh(point.mesh.data, point.mesh.model)
+
+    predictor = None
+    if point.strategy == "token_to_expert":
+        from repro.core.predictors import ConditionalProbabilityModel
+        from repro.data.synthetic import make_routing_trace
+        prof = make_routing_trace(
+            num_sequences=32, seq_len=32, vocab=cfg.vocab_size,
+            num_experts=cfg.moe.num_experts, num_layers=cfg.num_layers,
+            skew=1.8, seed=point.seed)
+        predictor = ConditionalProbabilityModel(
+            cfg.num_layers, cfg.moe.num_experts, cfg.vocab_size
+        ).fit(prof.experts, prof.tokens)
+
+    shape = dict(SMOKE_ENGINE if smoke else FULL_ENGINE)
+    replay = dict(SMOKE_TRACE if smoke else FULL_TRACE)
+    if max_iters:
+        replay["max_iters"] = max_iters
+    if time_scale:
+        replay["time_scale"] = time_scale
+
+    tracer = SpanTracer(process_name=f"sweep:{point.key}") \
+        if trace_out else None
+    ccfg = ContinuousConfig(strategy=point.strategy, **shape)
+    params = init_model(jax.random.PRNGKey(point.seed), cfg)
+    eng = ContinuousEngine(cfg, params, ccfg, mesh=mesh, ep_ranks=ep_ranks,
+                           predictor=predictor, tracer=tracer)
+    eng.warmup()
+
+    trace = build_workload(point.workload, cfg.vocab_size,
+                           horizon=replay["horizon"], rate=replay["rate"],
+                           seed=point.seed)
+    for r in sorted(to_serve_requests(trace), key=lambda r: r.arrival):
+        eng.submit(r)
+
+    # run_trace's virtual clock, with per-step walls kept for percentiles
+    walls = []
+    now, iters = 0.0, 0
+    t_job = time.perf_counter()
+    while eng.has_work() and iters < replay["max_iters"]:
+        sched = eng.scheduler
+        if (not sched.active_slots and sched.waiting
+                and sched.waiting[0].arrival > now):
+            now = sched.waiting[0].arrival
+        t0 = time.perf_counter()
+        start = now
+        eng.step(start, clock=lambda: start + (
+            time.perf_counter() - t0) * replay["time_scale"])
+        dt = time.perf_counter() - t0
+        walls.append(dt)
+        now = start + dt * replay["time_scale"]
+        iters += 1
+    wall_s = time.perf_counter() - t_job
+
+    recompiled = 0
+    try:
+        eng.assert_no_recompiles()
+    except AssertionError:
+        recompiled = 1
+    eng.metrics.flush(eng._plan_stack, eng.ep_ranks, ccfg.dup_slots)
+    s = eng.metrics.summary()
+
+    metrics = {
+        "step_p50_ms": float(np.percentile(walls, 50) * 1e3),
+        "step_p99_ms": float(np.percentile(walls, 99) * 1e3),
+        "steps": float(iters),
+        "submitted": float(len(trace)),
+        "recompiled": float(recompiled),
+        "drained_ok": float(not eng.has_work()),
+    }
+    for k in SUMMARY_METRICS:
+        if k in s:
+            metrics[k] = float(s[k])
+
+    if tracer is not None:
+        tracer.export(trace_out, extra={"sweep_point": point.to_obj()})
+
+    return {
+        "schema": 1,
+        "kind": "sweep-job",
+        "key": point.key,
+        "config": {**point.to_obj(), "smoke": smoke, **replay,
+                   "engine": shape},
+        "ok": bool(metrics["drained_ok"]) and not recompiled,
+        "wall_s": wall_s,
+        "metrics": metrics,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--point", required=True,
+                    help="JSON SweepPoint (see matrix.SweepPoint.to_obj)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace-out", default="")
+    ap.add_argument("--max-iters", type=int, default=0)
+    ap.add_argument("--time-scale", type=float, default=0.0)
+    args = ap.parse_args(argv)
+    point = SweepPoint.from_obj(json.loads(args.point))
+    doc = run_point(point, smoke=args.smoke, trace_out=args.trace_out,
+                    max_iters=args.max_iters, time_scale=args.time_scale)
+    sys.stdout.flush()
+    print(json.dumps(doc))
+    return 0 if doc["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

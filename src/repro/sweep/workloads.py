@@ -1,0 +1,79 @@
+"""Named workload builders for sweep jobs.
+
+Each entry maps a workload name (a matrix axis value) to a request trace
+with a distinct skew dynamic, so the sweep exercises the regimes the GPS
+guideline distinguishes: steady flat routing, a shifting hot topic,
+diurnal load, and multi-tenant mixtures with opposed skew.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.workloads import (ShiftingCorpus, TenantSpec, Topic, TraceRequest,
+                             make_trace, skew_shift_trace)
+
+
+def _steady(vocab: int, horizon: float, rate: float,
+            seed: int) -> List[TraceRequest]:
+    """Poisson arrivals over a flat corpus: skew stays low, the baseline
+    regime where duplication should mostly stay off."""
+    flat = Topic("broad", zipf_alpha=0.4, vocab_frac=1.0, seed=1)
+    corpus = ShiftingCorpus(vocab, [flat], schedule=[(0.0, [1.0])])
+    spec = TenantSpec("steady", corpus, arrivals="poisson", rate=rate,
+                      prompt_len_mean=24.0, prompt_len_max=64,
+                      out_len_mean=6.0, out_len_max=16)
+    return make_trace([spec], horizon, seed=seed)
+
+
+def _skew_shift(vocab: int, horizon: float, rate: float,
+                seed: int) -> List[TraceRequest]:
+    return skew_shift_trace(vocab, horizon=horizon, rate=rate, seed=seed)
+
+
+def _diurnal(vocab: int, horizon: float, rate: float,
+             seed: int) -> List[TraceRequest]:
+    return skew_shift_trace(vocab, horizon=horizon, rate=rate, seed=seed,
+                            arrivals="diurnal")
+
+
+def _multi_tenant(vocab: int, horizon: float, rate: float,
+                  seed: int) -> List[TraceRequest]:
+    """Two tenants whose hot topics peak at opposite ends of the session,
+    so aggregate skew never settles."""
+    broad = Topic("broad", zipf_alpha=0.5, vocab_frac=1.0, seed=1)
+    hot_a = Topic("hot-a", zipf_alpha=3.0, vocab_frac=0.05, seed=2)
+    hot_b = Topic("hot-b", zipf_alpha=3.0, vocab_frac=0.05, seed=3)
+    corpus_a = ShiftingCorpus(vocab, [broad, hot_a], schedule=[
+        (0.0, [0.2, 0.8]), (0.5 * horizon, [0.9, 0.1]),
+        (horizon, [1.0, 0.0])])
+    corpus_b = ShiftingCorpus(vocab, [broad, hot_b], schedule=[
+        (0.0, [1.0, 0.0]), (0.5 * horizon, [0.9, 0.1]),
+        (horizon, [0.2, 0.8])])
+    tenants = [
+        TenantSpec("tenant-a", corpus_a, arrivals="bursty", rate=rate / 2,
+                   prompt_len_mean=24.0, prompt_len_max=64,
+                   out_len_mean=6.0, out_len_max=16),
+        TenantSpec("tenant-b", corpus_b, arrivals="poisson", rate=rate / 2,
+                   prompt_len_mean=24.0, prompt_len_max=64,
+                   out_len_mean=6.0, out_len_max=16),
+    ]
+    return make_trace(tenants, horizon, seed=seed)
+
+
+WORKLOADS = {
+    "steady": _steady,
+    "skew_shift": _skew_shift,
+    "diurnal": _diurnal,
+    "multi_tenant": _multi_tenant,
+}
+
+
+def build_workload(name: str, vocab: int, *, horizon: float, rate: float,
+                   seed: int = 0) -> List[TraceRequest]:
+    try:
+        builder = WORKLOADS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {name!r} (have {sorted(WORKLOADS)})")
+    return builder(vocab, horizon, rate, seed)

@@ -6,8 +6,6 @@ in examples — one source of truth for both.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

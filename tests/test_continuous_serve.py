@@ -468,6 +468,7 @@ def test_trace_assembly_multi_tenant():
 # end-to-end: the benchmark in smoke mode IS the acceptance test
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_bench_serve_traces_smoke():
     import sys, os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -14,8 +14,6 @@ Three layers of coverage:
   tests/test_distributed.py for the pattern).
 """
 
-import dataclasses
-import json
 
 import jax.numpy as jnp
 import numpy as np
@@ -121,6 +119,7 @@ def test_fused_router_histogram_counts_assignments():
     assert int(counts.sum()) == T * K
 
 
+@pytest.mark.slow
 def test_ep_forward_sort_matches_onehot_multidevice():
     """Full EP forward equivalence on a (2, 4) mesh across top_k,
     capacity factors (loose AND tight — identical drop decisions), and
@@ -178,6 +177,7 @@ def test_ep_forward_sort_matches_onehot_multidevice():
                if "_c1.0_" in k), res
 
 
+@pytest.mark.slow
 def test_ep_decode_sort_matches_onehot_multidevice():
     """Replicated-token decode dispatch: both impls agree bit-for-bit."""
     res = run_sub("""

@@ -7,12 +7,16 @@ single-device view required by the smoke tests."""
 import json
 import os
 import subprocess
+
+import pytest
 import sys
 import textwrap
 
-import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+pytestmark = pytest.mark.slow  # every test here boots a subprocess mesh
 
 
 def run_sub(body: str, timeout=900) -> dict:

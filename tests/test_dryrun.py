@@ -9,6 +9,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # each combo lowers+compiles in a subprocess
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -28,14 +28,13 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.configs.base import MoEConfig
 from repro.core.duplication import duplicate_experts_host
 from repro.core.placement import (clamp_dup_slots, identity_plan,
                                   stack_plans, store_bytes_per_rank)
 from repro.data.synthetic import skewed_distribution
 from repro.runtime import (LayerStagedExecutor, ReplicaStore,
                            make_migrate_step, migrate_all,
-                           overlap_chunk_budget, plan_diff, plans_equal,
+                           overlap_chunk_budget, plan_diff,
                            should_migrate, split_hidden_exposed,
                            stacked_slot_experts)
 from tests.test_distributed import run_sub
@@ -81,7 +80,6 @@ def test_staged_fill_is_layer_ordered_and_ready_monotone():
     ex.begin(store.weights, diff, new)
     # entries were re-sorted by layer
     assert np.all(np.diff(ex._diff.layer) >= 0)
-    se_old = stacked_slot_experts(old, R, dup)
     se_new = stacked_slot_experts(new, R, dup)
     prev = ex.ready_mask()
     commit = None
@@ -296,6 +294,7 @@ def test_roofline_counts_store_residency():
 # multi-device: async path bit-exact at every intermediate state
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_overlapped_forward_bitexact_vs_gather_midstream():
     """During a staged migration the forward reading (live, back, ready,
     target) must equal the gather-pool oracle on the per-layer MIXED plan
@@ -385,6 +384,7 @@ def test_overlapped_forward_bitexact_vs_gather_midstream():
         assert s["counts_eq"], s
 
 
+@pytest.mark.slow
 def test_serve_engine_generate_tokens_equal_overlap_on_off():
     """Greedy generation through a meshed ServeEngine (re-plans every
     batch, staged migrations in flight) produces IDENTICAL token ids with
@@ -421,6 +421,7 @@ def test_serve_engine_generate_tokens_equal_overlap_on_off():
     assert res["equal"]
 
 
+@pytest.mark.slow
 def test_meshed_engine_prefetch_overlap_no_recompiles():
     """Meshed ContinuousEngine, overlap on: pre-begins migration toward
     the predicted plan before the boundary, commits, reports hidden

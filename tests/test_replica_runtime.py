@@ -225,6 +225,7 @@ def test_gps_charges_migration_to_duplicating_strategies():
 # multi-device equivalence + no-collective guarantee
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_store_forward_matches_gather_multidevice():
     """Store-fed EP forward is BIT-EXACT vs the per-step gather pool
     across dup_slots/top_k/predicted, including after a chunked migration
@@ -321,6 +322,7 @@ def test_store_forward_matches_gather_multidevice():
     assert migrated_any, "no case exercised the migration step"
 
 
+@pytest.mark.slow
 def test_identity_plan_skips_pool_gather_but_matches():
     """The lax.cond gather skip: identity plan (dup slots compiled in but
     nothing duplicated) produces the same logits as a forced gather, and
@@ -367,6 +369,7 @@ def test_identity_plan_skips_pool_gather_but_matches():
     assert res["decode_diff"] < 0.1
 
 
+@pytest.mark.slow
 def test_continuous_engine_store_migrates_without_recompiles():
     """Meshed ContinuousEngine in store mode: serves a workload, re-plans
     under a 1-chunk-per-step budget, commits migrations, and performs

@@ -1,7 +1,6 @@
 """Roofline machinery tests: HLO collective parsing (incl. loop-trip
 correction), analytic op model sanity, report plumbing."""
 
-import numpy as np
 import pytest
 
 from repro.configs.base import INPUT_SHAPES

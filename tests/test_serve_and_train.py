@@ -1,7 +1,6 @@
 """Serving engine + trainer + checkpoint + data substrate tests
 (single device)."""
 
-import os
 
 import jax
 import jax.numpy as jnp

@@ -6,12 +6,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_config
-from repro.core.gps import (GPSReport, T2EPoint, default_dist_eps,
-                            default_t2e_curve, fit_overhead_curve, run_gps,
-                            sweep)
+from repro.core.gps import (T2EPoint, default_dist_eps,
+                            fit_overhead_curve, run_gps, sweep)
 from repro.core.simulator import (A100_NVLINK, A100_PCIE, TPU_V5E_DCN,
-                                  TPU_V5E_POD, HardwareConfig,
-                                  duplication_is_hideable,
+                                  TPU_V5E_POD, duplication_is_hideable,
                                   duplication_move_time, layer_latency)
 
 MIX = get_config("mixtral-8x7b")

@@ -1,0 +1,392 @@
+"""Sweep harness: matrix expansion, reference bands, trend database,
+k8s manifests, and the check_trend/check_regression gate edge cases."""
+
+import json
+
+import pytest
+
+from repro.sweep.history import (append_entry, bench_history_entry,
+                                 load_history, series, sweep_history_entry,
+                                 trend)
+from repro.sweep.k8s import (job_manifest, manifest_name, validate_manifest,
+                             write_manifests)
+from repro.sweep.matrix import (FULL_SPEC, SMOKE_SPEC, MeshShape, SweepPoint,
+                                SweepSpec, parse_mesh)
+from repro.sweep.references import (check_metric, classify_metric,
+                                    gate_document, refresh_references,
+                                    structural_failures)
+from repro.sweep.report import drift_warnings, sparkline, trend_table
+
+
+# ---------------------------------------------------------------------------
+# matrix expansion
+# ---------------------------------------------------------------------------
+
+class TestMatrix:
+    def test_expansion_deterministic(self):
+        a = [p.key for p in SMOKE_SPEC.expand()]
+        b = [p.key for p in SMOKE_SPEC.expand()]
+        assert a == b
+        assert len(a) == len(set(a)), "config keys must be unique"
+
+    def test_smoke_tier_is_at_least_four_points(self):
+        pts = SMOKE_SPEC.expand()
+        assert len(pts) >= 4
+        assert len({p.mesh for p in pts}) >= 2     # >= 2 mesh shapes
+        assert len({p.workload for p in pts}) >= 2
+
+    def test_product_order_and_size(self):
+        spec = SweepSpec(archs=("a", "b"),
+                         meshes=(MeshShape(1, 2), MeshShape(2, 2)),
+                         workloads=("w1",), strategies=("s1", "s2"),
+                         seeds=(0, 1))
+        pts = spec.expand()
+        assert len(pts) == 2 * 2 * 1 * 2 * 2
+        # arch is the slowest axis, seed the fastest
+        assert pts[0].key == "a@1x2/w1/s1/s0"
+        assert pts[1].key == "a@1x2/w1/s1/s1"
+        assert pts[-1].key == "b@2x2/w1/s2/s1"
+
+    def test_point_roundtrip(self):
+        p = SweepPoint("mixtral-8x7b", MeshShape(2, 4), "steady",
+                       "dist_only", seed=3)
+        assert SweepPoint.from_obj(p.to_obj()) == p
+        assert p.to_obj()["key"] == p.key
+
+    def test_parse_mesh(self):
+        assert parse_mesh("2x4") == MeshShape(2, 4)
+        assert parse_mesh("2x4").devices == 8
+        with pytest.raises(ValueError):
+            parse_mesh("2by4")
+        with pytest.raises(ValueError):
+            parse_mesh("0x4")
+
+    def test_restrict_filters_and_rejects_unknown(self):
+        spec = FULL_SPEC.restrict(meshes=[MeshShape(2, 4)],
+                                  workloads=["steady"])
+        pts = spec.expand()
+        assert {p.mesh.key for p in pts} == {"2x4"}
+        assert {p.workload for p in pts} == {"steady"}
+        with pytest.raises(ValueError, match="unknown workload"):
+            FULL_SPEC.restrict(workloads=["nope"])
+
+
+# ---------------------------------------------------------------------------
+# reference bands
+# ---------------------------------------------------------------------------
+
+class TestReferences:
+    def test_inside_band_passes(self):
+        assert check_metric("m", 1.0, [1.0, 0.1, 0.1]) is None
+        assert check_metric("m", 1.09, [1.0, 0.1, 0.1]) is None
+        assert check_metric("m", 0.91, [1.0, 0.1, 0.1]) is None
+
+    def test_band_violations(self):
+        assert "above" in check_metric("m", 1.2, [1.0, 0.1, 0.1])
+        assert "below" in check_metric("m", 0.8, [1.0, 0.1, 0.1])
+
+    def test_missing_metric_fails(self):
+        msg = check_metric("m", None, [1.0, 0.1, 0.1])
+        assert msg is not None and "missing" in msg
+
+    def test_zero_reference_uses_absolute_tolerance(self):
+        # exact flag at ref 0 (e.g. recompiled): only 0 passes
+        assert check_metric("recompiled", 0.0, [0.0, 0.0, 0.0]) is None
+        assert check_metric("recompiled", 1.0, [0.0, 0.0, 0.0]) is not None
+        # non-exact tolerance around 0 is absolute, not relative
+        assert check_metric("m", 0.3, [0.0, None, 0.5]) is None
+        assert check_metric("m", 0.7, [0.0, None, 0.5]) is not None
+
+    def test_upper_only_tolerance(self):
+        ref = [100.0, None, 1.0]         # timings: faster is always fine
+        assert check_metric("wall_us", 1.0, ref) is None
+        assert check_metric("wall_us", 199.0, ref) is None
+        assert "above" in check_metric("wall_us", 201.0, ref)
+
+    def test_lower_only_tolerance(self):
+        ref = [2.0, 0.5, None]           # speedups: higher is always fine
+        assert check_metric("speedup", 50.0, ref) is None
+        assert check_metric("speedup", 1.01, ref) is None
+        assert "below" in check_metric("speedup", 0.99, ref)
+
+    def test_malformed_reference(self):
+        assert "malformed" in check_metric("m", 1.0, [1.0, 0.1])
+        assert "malformed" in check_metric("m", 1.0, None)
+        assert "malformed" in check_metric("m", 1.0, ["x", 0.1, 0.1])
+
+    def test_structural_failures(self):
+        assert structural_failures({"benches": {}, "total_wall_s": 0})
+        assert structural_failures({"total_wall_s": 5.0})
+        assert not structural_failures(
+            {"benches": {"b": {}}, "total_wall_s": 5.0})
+
+    def test_gate_document(self):
+        refs = {"schema": 1, "total_wall_s": [10.0, None, 0.5],
+                "benches": {"b": {"ok": [1.0, 0.0, 0.0],
+                                  "wall_us": [100.0, None, 1.0],
+                                  "speedup": [2.0, 0.5, None]}}}
+        good = {"total_wall_s": 12.0,
+                "benches": {"b": {"wall_us": 150.0, "ok": True,
+                                  "summary": {"speedup": 1.8}}}}
+        failures, checked = gate_document(good, refs)
+        assert failures == [] and checked == 4
+
+        bad = {"total_wall_s": 16.0,     # +60% > +50%
+               "benches": {"b": {"wall_us": 250.0, "ok": False,
+                                 "summary": {}}}}
+        failures, _ = gate_document(bad, refs)
+        joined = "\n".join(failures)
+        assert "total_wall_s" in joined
+        assert "b.wall_us" in joined
+        assert "b.ok" in joined
+        assert "b.speedup" in joined and "missing" in joined
+
+    def test_gate_document_missing_bench(self):
+        refs = {"benches": {"gone": {"ok": [1.0, 0.0, 0.0]}}}
+        failures, _ = gate_document(
+            {"total_wall_s": 1.0, "benches": {"other": {"ok": True}}}, refs)
+        assert any("disappeared" in f for f in failures)
+
+    def test_gate_empty_document_fails_loudly(self):
+        failures, _ = gate_document({"benches": {}}, {"benches": {}})
+        assert any("structurally empty" in f or "no benches" in f
+                   for f in failures)
+
+    def test_refresh_refuses_empty_and_classifies(self):
+        with pytest.raises(ValueError, match="refusing"):
+            refresh_references({"benches": {}, "total_wall_s": 0.0})
+        doc = {"total_wall_s": 50.0, "meta": {"git_sha": "abc"},
+               "benches": {"b": {"wall_us": 1e6, "ok": True, "summary": {
+                   "pack_speedup": 1.9, "trace_ok": 1.0,
+                   "meshed_recompiled": 0.0, "phase_route_us": 123.0}}}}
+        refs = refresh_references(doc)
+        b = refs["benches"]["b"]
+        assert b["ok"] == [1.0, 0.0, 0.0]
+        assert b["wall_us"][1:] == [None, 1.0]
+        assert b["pack_speedup"][1:] == [0.5, None]
+        assert b["trace_ok"][1:] == [0.0, 0.0]
+        assert b["meshed_recompiled"] == [0.0, 0.0, 0.0]
+        assert "phase_route_us" not in b, "unclassified metrics untracked"
+        # a refreshed document always round-trips through the gate
+        failures, checked = gate_document(doc, refs)
+        assert failures == [] and checked >= 5
+
+    def test_classify_metric(self):
+        assert classify_metric("overlap_bitexact") == (0.0, 0.0)
+        assert classify_metric("meshed_slo_ok") == (0.0, 0.0)
+        assert classify_metric("store_speedup") == (0.5, None)
+        assert classify_metric("step_p50_ms") == (None, 1.5)
+        assert classify_metric("goodput_req_s") is None
+
+
+# ---------------------------------------------------------------------------
+# history / trend database
+# ---------------------------------------------------------------------------
+
+class TestHistory:
+    def test_append_load_roundtrip(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        e1 = {"kind": "bench", "timestamp_utc": "t1", "total_wall_s": 10.0,
+              "benches": {"b": {"wall_us": 5.0, "ok": True,
+                                "summary": {"speedup": 2.0}}}}
+        e2 = {"kind": "sweep", "timestamp_utc": "t2", "key": "a@1x4/w/s/s0",
+              "ok": True, "wall_s": 3.0, "metrics": {"step_p50_ms": 9.0}}
+        append_entry(path, e1)
+        append_entry(path, e2)
+        entries = load_history(path)
+        assert entries == [e1, e2]
+
+    def test_series_keys(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        append_entry(path, {"kind": "bench", "timestamp_utc": "t1",
+                            "total_wall_s": 10.0,
+                            "benches": {"b": {"wall_us": 5.0, "ok": True,
+                                              "summary": {"m": 1.5}}}})
+        append_entry(path, {"kind": "sweep", "timestamp_utc": "t2",
+                            "key": "cfg", "ok": False, "wall_s": 3.0,
+                            "metrics": {"step_p50_ms": 9.0}})
+        s = series(load_history(path))
+        assert s[("run", "total_wall_s", "default")] == [("t1", 10.0)]
+        assert s[("b", "m", "default")] == [("t1", 1.5)]
+        assert s[("b", "ok", "default")] == [("t1", 1.0)]
+        assert s[("sweep", "step_p50_ms", "cfg")] == [("t2", 9.0)]
+        assert s[("sweep", "ok", "cfg")] == [("t2", 0.0)]
+
+    def test_legacy_lines_without_kind_still_read(self):
+        legacy = {"git_sha": "x", "timestamp_utc": "t0", "smoke": True,
+                  "total_wall_s": 90.0,
+                  "benches": {"b": {"wall_us": 1.0, "ok": True}}}
+        s = series([legacy])
+        assert ("b", "wall_us", "default") in s
+
+    def test_torn_write_skipped(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        path.write_text(json.dumps({"kind": "sweep", "key": "k", "ok": True,
+                                    "wall_s": 1.0, "metrics": {}}) +
+                        "\n{\"torn")
+        assert len(load_history(str(path))) == 1
+
+    def test_trend_drift_detection(self):
+        rising = [1.0, 1.1, 1.2, 1.3, 1.5]
+        t = trend(rising)
+        assert t["drifting"] and t["rel_change"] > 0.1
+        wobble = [1.0, 1.4, 0.9, 1.3, 1.0]
+        assert not trend(wobble)["drifting"]        # not monotonic
+        flatish = [1.0, 1.01, 1.02, 1.03]
+        assert not trend(flatish)["drifting"]       # inside DRIFT_REL
+        assert not trend([1.0, 2.0])["drifting"]    # too few points
+        assert trend([])["n"] == 0
+
+    def test_entry_builders(self):
+        doc = {"smoke": True, "total_wall_s": 5.0,
+               "meta": {"git_sha": "abc", "timestamp_utc": "t"},
+               "benches": {"b": {"wall_us": 1.0, "ok": True,
+                                 "summary": {"m": 2.0},
+                                 "derived": "ignored"}}}
+        e = bench_history_entry(doc)
+        assert e["kind"] == "bench" and e["git_sha"] == "abc"
+        assert e["benches"]["b"] == {"wall_us": 1.0, "ok": True,
+                                     "summary": {"m": 2.0}}
+        job = {"key": "k", "ok": True, "wall_s": 2.0,
+               "config": {"smoke": True}, "metrics": {"m": 1.0}}
+        se = sweep_history_entry(job, {"git_sha": "abc",
+                                       "timestamp_utc": "t"})
+        assert se["kind"] == "sweep" and se["key"] == "k"
+        assert se["metrics"] == {"m": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# k8s manifests
+# ---------------------------------------------------------------------------
+
+class TestK8s:
+    def _point(self):
+        return SweepPoint("mixtral-8x7b", MeshShape(2, 4), "skew_shift",
+                          "token_to_expert", seed=0)
+
+    def test_manifest_schema_valid(self):
+        m = job_manifest(self._point(), image="repro:ci")
+        assert validate_manifest(m) == []
+        assert m["apiVersion"] == "batch/v1" and m["kind"] == "Job"
+        c = m["spec"]["template"]["spec"]["containers"][0]
+        assert c["command"] == ["python", "-m", "repro.sweep.job"]
+        point = json.loads(c["args"][1])
+        assert point["mesh"] == "2x4"
+        env = {e["name"]: e["value"] for e in c["env"]}
+        assert "device_count=8" in env["XLA_FLAGS"]
+
+    def test_manifest_name_is_dns1123(self):
+        name = manifest_name(self._point())
+        assert len(name) <= 63
+        assert name == name.lower()
+        assert manifest_name(self._point()) == name   # deterministic
+        long_point = SweepPoint("a" * 80, MeshShape(1, 1), "w", "s")
+        assert len(manifest_name(long_point)) <= 63
+
+    def test_validate_catches_breakage(self):
+        m = job_manifest(self._point(), image="repro:ci")
+        m["kind"] = "Deployment"
+        m["metadata"]["name"] = "Bad_Name!"
+        m["spec"]["template"]["spec"]["restartPolicy"] = "Always"
+        del m["spec"]["template"]["spec"]["containers"][0]["image"]
+        errors = validate_manifest(m)
+        assert len(errors) >= 4
+
+    def test_write_manifests(self, tmp_path):
+        pts = SMOKE_SPEC.expand()
+        paths = write_manifests(pts, str(tmp_path), image="repro:ci")
+        assert len(paths) == len(pts)
+        for p in paths:
+            text = open(p).read()
+            assert "batch/v1" in text and "repro-sweep" in text
+
+
+# ---------------------------------------------------------------------------
+# report rendering
+# ---------------------------------------------------------------------------
+
+class TestReport:
+    def test_trend_table_renders_rows(self):
+        smap = {("b", "m", "cfg"): [("t1", 1.0), ("t2", 2.0)]}
+        md = trend_table(smap)
+        assert "| b | m | cfg | 2 |" in md
+        refs = {"benches": {"b": {"m": [1.0, 0.5, None]}}}
+        md = trend_table(smap, refs=refs)
+        assert "[0.5, inf]" in md
+
+    def test_sparkline(self):
+        assert sparkline([]) == ""
+        assert sparkline([1.0, 1.0]) == "▁▁"
+        s = sparkline([0.0, 0.5, 1.0])
+        assert s[0] == "▁" and s[-1] == "█"
+
+    def test_drift_warnings(self):
+        smap = {("b", "m", "c"): [("t", v) for v in
+                                  [1.0, 1.2, 1.4, 1.6, 1.8]]}
+        warns = drift_warnings(smap)
+        assert len(warns) == 1 and "b.m" in warns[0]
+
+
+# ---------------------------------------------------------------------------
+# gate CLIs (check_regression bugfix + check_trend)
+# ---------------------------------------------------------------------------
+
+class TestGateCLIs:
+    def test_check_regression_empty_current_fails(self):
+        from benchmarks import check_regression
+        baseline = {"total_wall_s": 10.0,
+                    "benches": {"b": {"ok": True, "wall_us": 1.0}}}
+        # the truncated-run shape that used to exit 0 when baseline was
+        # also empty; now both directions fail loudly
+        failures = check_regression.compare({"benches": {}}, baseline)
+        assert any("structurally empty" in f for f in failures)
+        failures = check_regression.compare(
+            {"benches": {}}, {"benches": {}})
+        assert failures, "empty vs empty must not pass"
+
+    def test_check_regression_healthy_doc_passes(self):
+        from benchmarks import check_regression
+        doc = {"total_wall_s": 10.0,
+               "benches": {"b": {"ok": True, "wall_us": 1.0}}}
+        assert check_regression.compare(dict(doc), dict(doc)) == []
+
+    def test_check_trend_cli_gates_and_writes_markdown(self, tmp_path):
+        from benchmarks import check_trend
+        doc = {"total_wall_s": 50.0, "meta": {},
+               "benches": {"b": {"wall_us": 1e6, "ok": True,
+                                 "summary": {"pack_speedup": 1.9}}}}
+        doc_path = tmp_path / "doc.json"
+        doc_path.write_text(json.dumps(doc))
+        refs_path = tmp_path / "refs.json"
+        refs_path.write_text(json.dumps(refresh_references(doc)))
+        hist_path = tmp_path / "h.jsonl"
+        append_entry(str(hist_path), bench_history_entry(doc))
+        md_path = tmp_path / "trend.md"
+        rc = check_trend.main([str(doc_path), "--references",
+                               str(refs_path), "--history", str(hist_path),
+                               "--markdown", str(md_path)])
+        assert rc == 0
+        md = md_path.read_text()
+        assert "Perf-reference gate" in md and "| b |" in md
+
+        # regressed speedup breaches its band -> exit 1
+        bad = dict(doc, benches={"b": {"wall_us": 1e6, "ok": True,
+                                       "summary": {"pack_speedup": 0.5}}})
+        doc_path.write_text(json.dumps(bad))
+        assert check_trend.main([str(doc_path), "--references",
+                                 str(refs_path), "--history",
+                                 str(hist_path)]) == 1
+
+    def test_check_trend_refresh_roundtrip(self, tmp_path, monkeypatch):
+        from benchmarks import check_trend
+        doc = {"total_wall_s": 50.0, "meta": {},
+               "benches": {"b": {"wall_us": 1e6, "ok": True,
+                                 "summary": {"store_speedup": 2.0}}}}
+        doc_path = tmp_path / "doc.json"
+        doc_path.write_text(json.dumps(doc))
+        refs_path = tmp_path / "refs.json"
+        monkeypatch.setenv("REPRO_BENCH_REFRESH_REFERENCES", "1")
+        assert check_trend.main([str(doc_path), "--references",
+                                 str(refs_path)]) == 0
+        refs = json.loads(refs_path.read_text())
+        assert refs["benches"]["b"]["store_speedup"][0] == 2.0
