@@ -125,6 +125,91 @@ print(json.dumps({
 """
 
 
+# Lever A/B under genuine capacity pressure: constant-token prompts
+# concentrate routing on one expert, capacity_factor 0.5 with
+# prefill_len 64 over 4 EP ranks puts the hot slot well past the cap
+# floor (8/rank). The duplicate-only leg measurably DROPS tokens; the
+# reschedule leg must absorb every overflow via the scheduler quotas +
+# rescue dispatch round, paying only extra a2a bytes.
+_RESCHED_SUB = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json, time
+import jax, numpy as np
+from repro.configs.registry import get_config
+from repro.models.transformer import init_model
+from repro.serve import ContinuousConfig, ContinuousEngine
+from repro.serve.scheduler import ServeRequest
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+base = get_config("mixtral-8x7b").reduced()
+cfg = dataclasses.replace(base, moe=dataclasses.replace(
+    base.moe, capacity_factor=0.5, duplication_slots=1))
+params = init_model(jax.random.PRNGKey(0), cfg)
+out = {}
+for lever in ("duplicate", "reschedule"):
+    ccfg = ContinuousConfig(max_slots=4, prefill_len=64, block_size=8,
+                            max_len=96, strategy="dist_only",
+                            predict_interval=4, dup_slots=1,
+                            metrics_window=4, lever=lever)
+    eng = ContinuousEngine(cfg, params, ccfg, mesh=mesh, ep_ranks=4)
+    eng.warmup()
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        eng.submit(ServeRequest(rid=i, arrival=float(i) * 0.01,
+                                tokens=np.full(int(rng.integers(40, 60)),
+                                               7, np.int32),
+                                max_new_tokens=int(rng.integers(1, 6))))
+    walls, n = [], 0
+    while eng.has_work() and n < 80:
+        t0 = time.perf_counter()
+        eng.step(float(n))
+        walls.append(time.perf_counter() - t0)
+        n += 1
+    recompiled = 0
+    try:
+        eng.assert_no_recompiles()
+    except AssertionError:
+        recompiled = 1
+    eng.metrics.flush(eng._plan_stack, eng.ep_ranks, 1)
+    s = eng.metrics.summary()
+    out[lever] = {
+        "step_p50_ms": float(np.percentile(walls, 50) * 1e3),
+        "completed": len(eng.scheduler.completed),
+        "recompiled": recompiled,
+        "dropped_tokens": float(s.get("dropped_tokens", -1.0)),
+        "overflow_tokens": float(s.get("overflow_tokens", -1.0)),
+        "overflow_absorbed_frac": float(
+            s.get("overflow_absorbed_frac", -1.0)),
+        "resched_a2a_bytes": float(s.get("resched_a2a_bytes", 0.0)),
+        "resched_plans": float(s.get("resched_plans", 0.0)),
+    }
+print(json.dumps(out))
+"""
+
+
+def _run_resched_ab(attempts: int = 2) -> dict:
+    import repro
+    src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    # the multi-device XLA CPU client rarely deadlocks at startup under a
+    # fake-device mesh; a bounded timeout + one clean retry beats hanging
+    # the whole bench suite on it
+    last = None
+    for _ in range(attempts):
+        try:
+            out = subprocess.run(
+                [sys.executable, "-c", textwrap.dedent(_RESCHED_SUB)],
+                capture_output=True, text=True, timeout=900,
+                env=dict(os.environ, PYTHONPATH=src_root))
+        except subprocess.TimeoutExpired as e:
+            last = f"timed out after {e.timeout}s"
+            continue
+        if out.returncode == 0:
+            return json.loads(out.stdout.strip().splitlines()[-1])
+        last = out.stderr[-2000:]
+    raise RuntimeError(f"resched A/B subprocess failed:\n{last}")
+
+
 def _run_meshed(trace_out: str) -> dict:
     import repro
     src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
@@ -235,6 +320,8 @@ def run(verbose: bool = True, smoke: bool = None):
         meshed = _run_meshed(meshed_trace_path)
         with open(meshed_trace_path) as f:
             meshed_doc = json.load(f)
+    resched_ab = _run_resched_ab()
+    dup_leg, res_leg = resched_ab["duplicate"], resched_ab["reschedule"]
 
     merged = merge_traces([tracer.to_chrome(), meshed_doc],
                           names=["repro-serve-local", "repro-serve-meshed"])
@@ -271,6 +358,17 @@ def run(verbose: bool = True, smoke: bool = None):
              trace_ok=trace_ok,
              trace_events=float(len(merged["traceEvents"])),
              tracer_off_overhead_frac=overhead_frac,
+             # lever A/B at capacity pressure: duplicate-only drops, the
+             # reschedule lever must absorb the same overflow dropless
+             dup_dropped_tokens=dup_leg["dropped_tokens"],
+             resched_dropped_tokens=res_leg["dropped_tokens"],
+             overflow_tokens=res_leg["overflow_tokens"],
+             overflow_absorbed_frac=res_leg["overflow_absorbed_frac"],
+             resched_a2a_bytes=res_leg["resched_a2a_bytes"],
+             resched_plans=res_leg["resched_plans"],
+             resched_step_p50_ms=res_leg["step_p50_ms"],
+             resched_recompiled=float(res_leg["recompiled"]
+                                      or dup_leg["recompiled"]),
              **{k: float(v) for k, v in audit.summary().items()},
              **{k: float(v) for k, v in eng.accuracy.summary().items()})
 
@@ -320,6 +418,15 @@ def run(verbose: bool = True, smoke: bool = None):
               f"{'OK' if s['meshed_slo_ok'] else 'MISS'}), "
               f"recompiles={int(s['meshed_recompiled'])}, "
               f"completed={int(s['meshed_completed'])}")
+        print(f"reschedule lever A/B (capf=0.5): duplicate drops "
+              f"{dup_leg['dropped_tokens']:.0f} tok | reschedule drops "
+              f"{res_leg['dropped_tokens']:.0f} of "
+              f"{res_leg['overflow_tokens']:.0f} overflow "
+              f"(absorbed={res_leg['overflow_absorbed_frac']:.2f}, "
+              f"a2a={res_leg['resched_a2a_bytes'] / 1e6:.2f}MB, "
+              f"plans={res_leg['resched_plans']:.0f}, "
+              f"p50 {dup_leg['step_p50_ms']:.0f}ms -> "
+              f"{res_leg['step_p50_ms']:.0f}ms)")
         print(f"trace artifact: {trace_path} "
               f"({int(s['trace_events'])} events, "
               f"{'valid' if trace_ok else 'INVALID: ' + '; '.join(errors[:3] + missing)}) | "
@@ -352,6 +459,18 @@ def run(verbose: bool = True, smoke: bool = None):
     assert overhead_frac < TRACER_OFF_BUDGET_FRAC, (
         f"disabled tracer costs {overhead_frac:.1%} of a meshed step "
         f"(budget {TRACER_OFF_BUDGET_FRAC:.0%})")
+    # the combined strategy space's acceptance: under identical capacity
+    # pressure the reschedule lever beats duplicate-only — it sees real
+    # overflow yet drops nothing, where the duplicate leg drops tokens
+    assert dup_leg["dropped_tokens"] > 0, \
+        "duplicate leg saw no drops — capacity pressure recipe broken"
+    assert res_leg["overflow_tokens"] > 0, \
+        "reschedule leg saw no overflow — lever never engaged"
+    assert res_leg["dropped_tokens"] == 0.0, (
+        f"reschedule lever dropped {res_leg['dropped_tokens']:.0f} of "
+        f"{res_leg['overflow_tokens']:.0f} overflow tokens")
+    assert s["resched_recompiled"] == 0.0, \
+        "lever A/B legs recompiled after warmup"
 
     derived = (f"completed={n_completed}/{len(trace)} "
                f"switches={n_switches} "
@@ -359,7 +478,8 @@ def run(verbose: bool = True, smoke: bool = None):
                f"pred_hit={s.get('pred_hit_rate', float('nan')):.2f} "
                f"ttft_p99={s['ttft_p99']*1e3:.0f}ms "
                f"tpot_p99={s['tpot_p99']*1e3:.0f}ms "
-               f"meshed_p50={s['meshed_step_p50_ms']:.0f}ms")
+               f"meshed_p50={s['meshed_step_p50_ms']:.0f}ms "
+               f"resched_absorbed={s['overflow_absorbed_frac']:.2f}")
     return s, derived
 
 

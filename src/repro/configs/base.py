@@ -46,6 +46,13 @@ class MoEConfig:
     # that layer's fill commits (repro.runtime.LayerStagedExecutor).
     # False restores the synchronous drain-at-replan path.
     overlap_migration: bool = True
+    # Token rescheduling (repro.schedule) ------------------------------------
+    # Capacity fraction of the rescue round: tokens that overflow their
+    # round-1 slot are re-dispatched to an alternate copy through a second,
+    # smaller all-to-all with per-slot capacity
+    # ``max(8, cap * resched_cap_frac)``. Only active when a reschedule
+    # quota tensor is threaded into dispatch (lever = reschedule/both).
+    resched_cap_frac: float = 0.5
     # Per-rank HBM budget (GB) for the replica store (which holds a second
     # copy of the home experts plus the replica slots). 0 = unlimited;
     # otherwise engines clamp duplication_slots down until the store fits

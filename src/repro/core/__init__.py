@@ -8,12 +8,15 @@ from repro.core.placement import (PlacementPlan, identity_plan,
 from repro.core.simulator import (A100_NVLINK, A100_PCIE, TPU_V5E_16,
                                   TPU_V5E_DCN, TPU_V5E_POD, HardwareConfig,
                                   LatencyBreakdown, layer_latency)
-from repro.core.gps import GPSReport, T2EPoint, run_gps, sweep
+from repro.core.gps import (LEVERS, GPSReport, StrategyVerdict, T2EPoint,
+                            recommend_strategy, run_gps, sweep)
 
 __all__ = [
     "A100_NVLINK", "A100_PCIE", "DuplicationResult", "GPSReport",
-    "HardwareConfig", "LatencyBreakdown", "PlacementPlan", "T2EPoint",
-    "TPU_V5E_16", "TPU_V5E_DCN", "TPU_V5E_POD", "bottleneck_load",
-    "duplicate_experts_host", "duplicate_experts_jax", "identity_plan",
-    "layer_latency", "plan_from_assignments", "run_gps", "skewness", "sweep",
+    "HardwareConfig", "LEVERS", "LatencyBreakdown", "PlacementPlan",
+    "StrategyVerdict", "T2EPoint", "TPU_V5E_16", "TPU_V5E_DCN",
+    "TPU_V5E_POD", "bottleneck_load", "duplicate_experts_host",
+    "duplicate_experts_jax", "identity_plan", "layer_latency",
+    "plan_from_assignments", "recommend_strategy", "run_gps", "skewness",
+    "sweep",
 ]

@@ -19,7 +19,7 @@ simulator reproduces Fig 6/7 without re-measuring.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -93,12 +93,44 @@ def fit_overhead_curve(points: Sequence[T2EPoint]) -> Callable[[float], float]:
 # strategy selection
 # ---------------------------------------------------------------------------
 
+LEVERS = ("duplicate", "reschedule", "both")
+
+
+class StrategyVerdict(str):
+    """Verdict over the combined strategy space (prediction x lever).
+
+    Subclasses ``str`` so it compares, hashes and serialises as the
+    prediction-mode name ("none" | "dist_only" | "token_to_expert") —
+    pre-lever callers that do ``name == "dist_only"`` keep working — while
+    carrying which balancing *lever* the prediction should drive:
+    ``duplicate`` (move weights), ``reschedule`` (move tokens) or ``both``.
+    """
+    lever: str
+
+    def __new__(cls, prediction: str, lever: str = "duplicate"):
+        self = super().__new__(cls, prediction)
+        self.lever = "none" if prediction == "none" else lever
+        return self
+
+    @property
+    def prediction(self) -> str:
+        return str(self)
+
+    @property
+    def combined(self) -> str:
+        """Render for audit logs: e.g. ``dist_only+reschedule``."""
+        if str(self) == "none":
+            return "none"
+        return f"{str(self)}+{self.lever}"
+
+
 @dataclass
 class StrategyResult:
     strategy: str                     # none | dist_only | token_to_expert
     accuracy: float
     latency: LatencyBreakdown
     predictor: str = ""
+    lever: str = "duplicate"
 
     @property
     def total(self) -> float:
@@ -114,6 +146,9 @@ class GPSReport:
     dist_only: StrategyResult
     t2e_points: List[StrategyResult]
     comm_model: str = "paper"
+    # lever-costed grid {dist_only, t2e ladder} x levers (run_gps(levers=...));
+    # empty when only the paper's duplicate lever was evaluated pre-lever-API.
+    combos: List[StrategyResult] = field(default_factory=list)
 
     @property
     def best_t2e(self) -> StrategyResult:
@@ -135,6 +170,26 @@ class GPSReport:
     def saving_difference(self) -> float:
         """Fig 7: dist_only saving - best t2e saving ( >0 => dist_only wins)."""
         return self.dist_only_saving - self.t2e_saving
+
+    @property
+    def best_combo(self) -> StrategyResult:
+        """Argmin over the lever-costed grid (falls back to the duplicate
+        lever's legacy results when no combos were evaluated)."""
+        pool = self.combos or ([self.dist_only] + self.t2e_points)
+        return min(pool, key=lambda r: r.total)
+
+    def best_for_lever(self, lever: str) -> Optional[StrategyResult]:
+        pool = [r for r in self.combos if r.lever == lever]
+        return min(pool, key=lambda r: r.total) if pool else None
+
+    def saving_of(self, r: StrategyResult) -> float:
+        return 1.0 - r.total / self.baseline.total
+
+    @property
+    def reschedule_saving(self) -> float:
+        """Best reschedule-lever saving vs no balancing (0 if not costed)."""
+        best = self.best_for_lever("reschedule")
+        return self.saving_of(best) if best is not None else 0.0
 
     @property
     def dist_only_speedup_over_t2e(self) -> float:
@@ -186,6 +241,10 @@ def run_gps(
     comm_model: str = "paper",
     migration_stall_s: float = 0.0,
     migration_hidden_frac: float = 0.0,
+    levers: Sequence[str] = ("duplicate",),
+    resched_residual: float = 0.05,
+    resched_extra_frac: float = 0.10,
+    dup_hbm_bytes: float = 0.0,
 ) -> GPSReport:
     """Evaluate all strategies for one (model, hardware, skew) point.
 
@@ -201,6 +260,23 @@ def run_gps(
     remainder ``(1 - frac) * stall`` is charged, so the verdict reflects
     overlapped-transfer economics: duplication that was too churn-heavy
     for synchronous migration can win once the transfer rides for free.
+
+    Combined strategy space (``report.combos``): every prediction mode is
+    additionally costed per balancing *lever* in ``levers``. The lever
+    changes which costs apply in the same roofline:
+
+      duplicate    migration stall + ``dup_hbm_bytes`` replica-weight reads.
+      reschedule   no migration (the plan stays put); instead the rescue
+                   round ships ``resched_extra_frac`` more dispatch bytes
+                   and FFN balance only reaches ``resched_residual``.
+      both         pays both costs; FFN load is the finer of the two.
+
+    ``resched_residual``: rank-imbalance the token scheduler could not
+    remove (measured: ``RescheduleResult.imbalance_sched - 1``).
+    ``resched_extra_frac``: rescue-round a2a bytes / primary dispatch
+    bytes (measured from ``MoEStats.overflow``).
+    ``dup_hbm_bytes``: per-device replica-slot weight bytes read per step
+    (0 keeps the legacy duplicate costing; engines pass the real size).
     """
     if cfg.moe is None:
         raise ValueError(f"{cfg.name} has no MoE FFN: the paper's technique "
@@ -235,9 +311,31 @@ def run_gps(
             predictor=p.name))
         for p in curve
     ]
+
+    combos: List[StrategyResult] = []
+    for lever in levers:
+        if lever not in LEVERS:
+            raise ValueError(f"unknown lever {lever!r}; want one of {LEVERS}")
+        duplicating = lever in ("duplicate", "both")
+        lkw = dict(lever=lever,
+                   resched_residual=resched_residual,
+                   resched_extra_frac=resched_extra_frac,
+                   dup_hbm_bytes=dup_hbm_bytes if duplicating else 0.0)
+        price = charge_migration if duplicating else (lambda r: r)
+        combos.append(price(StrategyResult(
+            "dist_only", 1.0 - eps_d,
+            lat(strategy="dist_only", eps=eps_d, **lkw), lever=lever)))
+        for p in curve:
+            combos.append(price(StrategyResult(
+                "token_to_expert", p.accuracy,
+                lat(strategy="token_to_expert", eps=1.0 - p.accuracy,
+                    overhead_frac=p.overhead_frac, **lkw),
+                predictor=p.name, lever=lever)))
+
     return GPSReport(model=cfg.name, hardware=hw.name, skew=skew,
                      baseline=baseline, dist_only=dist_only,
-                     t2e_points=t2e_points, comm_model=comm_model)
+                     t2e_points=t2e_points, comm_model=comm_model,
+                     combos=combos)
 
 
 def sweep(
@@ -263,30 +361,36 @@ def recommend_strategy(
     seq: int = 256,
     allow_t2e: bool = True,
     min_saving: float = 0.02,
+    levers: Sequence[str] = ("duplicate",),
     **kw,
-) -> Tuple[str, GPSReport]:
+) -> Tuple[StrategyVerdict, GPSReport]:
     """One-shot guideline for the ONLINE controller: given the skew the
     serving loop just *measured* (instead of an offline dataset estimate),
-    return the engine strategy name to run with next.
+    return the (prediction, lever) verdict to run with next. The verdict
+    compares as the prediction-mode string (``StrategyVerdict`` subclasses
+    ``str``) and carries ``.lever``.
 
     ``allow_t2e`` — False when no Token-to-Expert predictor is loaded in
     the engine (the controller must not pick an unrunnable strategy).
-    ``min_saving`` — below this predicted end-to-end saving, duplication
-    is not worth its plan churn: run plain EP ("none").
+    ``min_saving`` — below this predicted end-to-end saving, balancing
+    is not worth its churn: run plain EP (verdict "none"/"none").
+    ``levers`` — which balancing levers the engine can actually drive;
+    the default keeps the pre-lever duplicate-only arbitration.
     ``migration_stall_s`` (kw) — measured replica-migration stall per
-    layer-step; duplicating strategies carry it, so heavy plan churn
-    tips the verdict toward "none" (see ``run_gps``).
+    layer-step; duplicating levers carry it, so heavy plan churn tips
+    the verdict toward "reschedule" or "none" (see ``run_gps``).
     ``migration_hidden_frac`` (kw) — the fraction of that stall the
     engine's overlapped prefetcher measured as hidden under compute;
     only the exposed remainder is charged.
+    ``resched_residual`` / ``resched_extra_frac`` / ``dup_hbm_bytes``
+    (kw) — measured lever costs, see ``run_gps``.
     """
     report = run_gps(cfg, hw, batch=batch, seq=seq,
-                     skew=max(float(skew), 1.0), **kw)
-    candidates = [("dist_only", report.dist_only)]
-    if allow_t2e:
-        candidates.append(("token_to_expert", report.best_t2e))
-    name, best = min(candidates, key=lambda nr: nr[1].total)
-    saving = 1.0 - best.total / report.baseline.total
+                     skew=max(float(skew), 1.0), levers=tuple(levers), **kw)
+    pool = [r for r in report.combos
+            if allow_t2e or r.strategy != "token_to_expert"]
+    best = min(pool, key=lambda r: r.total)
+    saving = report.saving_of(best)
     if saving < min_saving:
-        return "none", report
-    return name, report
+        return StrategyVerdict("none"), report
+    return StrategyVerdict(best.strategy, best.lever), report

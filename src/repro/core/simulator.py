@@ -209,6 +209,10 @@ def layer_latency(
     overhead_frac: float = 0.0,      # T2E predictor cost / no-overhead runtime
     scenario: str = "typical",
     comm_model: str = "paper",       # paper | balanced (see DESIGN.md)
+    lever: str = "duplicate",        # duplicate | reschedule | both
+    resched_residual: float = 0.0,   # rank imbalance left after token sched
+    resched_extra_frac: float = 0.0, # rescue-round a2a bytes / dispatch bytes
+    dup_hbm_bytes: float = 0.0,      # replica-slot weight bytes read per step
 ) -> LatencyBreakdown:
     """Single-layer MoE prefill latency under a prediction strategy.
 
@@ -216,6 +220,21 @@ def layer_latency(
     Only leaves communication at the skew-scaled baseline). ``"balanced"``
     additionally credits dispatch balance to duplication (the physically
     tighter model; kept separate so the paper reproduction stays faithful).
+
+    The *lever* axis (ROADMAP combined strategy space) selects which
+    balancing mechanism the prediction feeds — the defaults reproduce the
+    paper's duplication-only accounting bit for bit:
+
+      duplicate   FFN load = 1 + f(eps); pays migration (charged by the
+                  caller as overhead) and replica HBM reads
+                  (``dup_hbm_bytes`` folded into the FFN roofline bytes).
+      reschedule  no weight movement: the plan stays put and token
+                  scheduling levels ranks to ``resched_residual``; pays
+                  ``resched_extra_frac`` more dispatch/combine bytes (the
+                  overflow rescue round). Never worse than no balancing.
+      both        duplication sets the coarse balance, token scheduling
+                  grinds the residual: load = 1 + f(min(eps, residual)),
+                  pays both the comm surcharge and the duplicate costs.
     """
     n = hw.num_devices
     tokens = batch * seq
@@ -233,10 +252,14 @@ def layer_latency(
     balanced_share = routed_f / n
     if strategy == "none":
         load = skew
-    else:
+    elif lever == "reschedule":
+        load = min(skew, bottleneck_factor(resched_residual, n, scenario))
+    elif lever == "both":
+        load = bottleneck_factor(min(eps, resched_residual), n, scenario)
+    else:   # duplicate (the paper's lever)
         load = bottleneck_factor(eps, n, scenario)
     ffn_bytes = expert_bytes(cfg) * _experts_per_device(cfg, n) \
-        + 2 * tokens * d * BYTES / n
+        + dup_hbm_bytes + 2 * tokens * d * BYTES / n
     t_ffn = gemm_time(hw, balanced_share * load, ffn_bytes)
     # always-on branch (shared experts / dense residual), TP over n
     dense_f = dense_ffn_flops_per_token(cfg) * tokens / n
@@ -258,6 +281,12 @@ def layer_latency(
     else:   # none, or dist_only under the paper's accounting
         t_disp = alltoall_time(hw, base_move * skew)
         t_comb = alltoall_time(hw, base_move * skew)
+
+    if lever in ("reschedule", "both") and strategy != "none":
+        # overflow tokens take a second hop to their rescue slot and back
+        surcharge = 1.0 + max(float(resched_extra_frac), 0.0)
+        t_disp *= surcharge
+        t_comb *= surcharge
 
     # --- prediction overhead ------------------------------------------------
     base_total = t_attn + t_ar + t_disp + t_ffn + t_comb

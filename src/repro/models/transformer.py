@@ -232,9 +232,14 @@ def init_cache(cfg: ModelConfig, rt: Runtime, batch: int, max_len: int,
 
 def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
                predicted_l, decode: bool, token_weight=None,
-               slot_w_l=None):
+               slot_w_l=None, resched_l=None):
     """x: (B, S, d). Returns (y, expert_counts (E,), slot_counts, aux, z,
-    dropped).
+    dropped, overflow).
+
+    ``resched_l``: optional (E, C_max) int32 reschedule quota for this
+    layer (``repro.schedule``) — replica choice follows the scheduler's
+    per-copy shares and capacity-overflow tokens get a rescue dispatch
+    round. Traced, so quota refreshes never recompile.
 
     ``token_weight``: optional (B, S) per-token weight for the expert
     histogram — the continuous-batching engine passes the active/padding
@@ -258,7 +263,8 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
         counts = jnp.zeros((moe.num_experts,), jnp.float32).at[
             router_out.expert_idx.reshape(-1)].add(w)
         return (y, counts, counts, router_out.aux_loss, router_out.z_loss,
-                jnp.asarray(0, jnp.int32))    # dense path never drops
+                jnp.asarray(0, jnp.int32),    # dense path never drops
+                jnp.asarray(0, jnp.int32))
 
     mesh = rt.mesh
     baxes = _batch_axes(mesh)
@@ -307,7 +313,7 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
     router_impl = ("fused" if rt.use_kernel and moe.dispatch_impl == "sort"
                    else "dense")
 
-    def inner(x_blk, router_w, experts_w, plan, pred, w_blk, slot_blk):
+    def inner(x_blk, router_w, experts_w, plan, pred, w_blk, slot_blk, quota):
         t = x_blk.reshape(-1, x_blk.shape[-1])
         router_out = route(router_w, moe, t, impl=router_impl)
         y, stats = dispatch_fn(
@@ -317,9 +323,11 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
             use_duplication=rt.use_duplication,
             predicted_idx=pred.reshape(-1, moe.top_k) if pred is not None else None,
             use_kernel=rt.use_kernel,
-            slot_weights=slot_blk)
+            slot_weights=slot_blk,
+            resched_quota=quota)
         counts, slots = stats.expert_counts, stats.slot_counts
         aux, z, dropped = stats.aux_loss, stats.z_loss, stats.dropped
+        overflow = stats.overflow
         if w_blk is not None:
             # weighted histogram replaces the dispatch count (padding /
             # idle-slot tokens carry weight 0). Prefill tokens are
@@ -338,26 +346,28 @@ def _moe_apply(layer_p, cfg: ModelConfig, x, rt: Runtime, plan_l,
             aux = jax.lax.pmean(aux, baxes)
             z = jax.lax.pmean(z, baxes)
             dropped = jax.lax.psum(dropped, baxes)
-        return y.reshape(x_blk.shape), counts, slots, aux, z, dropped
+            overflow = jax.lax.psum(overflow, baxes)
+        return y.reshape(x_blk.shape), counts, slots, aux, z, dropped, overflow
 
     plan_specs = PlacementPlan(P(), P(), P(), P())
     pred_spec = None if predicted_l is None else x_spec
     w_spec = None if token_weight is None else P(*x_spec[:-1])
     slot_spec = None if slot_w_l is None else P("model", None, None)
-    y, counts, slot_counts, aux, z, dropped = shard_map(
+    resched_spec = None if resched_l is None else P()
+    y, counts, slot_counts, aux, z, dropped, overflow = shard_map(
         inner, mesh=mesh,
         in_specs=(x_spec, P(), expert_specs, plan_specs, pred_spec, w_spec,
-                  slot_spec),
-        out_specs=(x_spec, P(), P(), P(), P(), P()),
+                  slot_spec, resched_spec),
+        out_specs=(x_spec, P(), P(), P(), P(), P(), P()),
         check_vma=False,
     )(x, layer_p["moe"]["router"], layer_p["moe"]["experts"], plan_l,
-      predicted_l, token_weight, slot_w_l)
+      predicted_l, token_weight, slot_w_l, resched_l)
 
     if "shared" in layer_p["moe"]:
         y = y + ffn(layer_p["moe"]["shared"], x, cfg.activation)
     if "dense" in layer_p["moe"]:
         y = y + ffn(layer_p["moe"]["dense"], x, cfg.activation)
-    return y, counts, slot_counts, aux, z, dropped
+    return y, counts, slot_counts, aux, z, dropped, overflow
 
 
 # ---------------------------------------------------------------------------
@@ -368,12 +378,13 @@ def _zero_stats(cfg):
     E = cfg.moe.num_experts if cfg.is_moe else 1
     return (jnp.zeros((E,), jnp.float32), jnp.zeros((E,), jnp.float32),
             jnp.asarray(0.0, jnp.float32), jnp.asarray(0.0, jnp.float32),
-            jnp.asarray(0, jnp.int32))
+            jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
 
 
 def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
                 mode="train", enc_out=None, plan_l=None, predicted_l=None,
-                block_tables=None, token_weight=None, slot_w_l=None):
+                block_tables=None, token_weight=None, slot_w_l=None,
+                resched_l=None):
     """Generic attention+FFN layer for dense/moe/vlm/audio-decoder."""
     window = rt.window(cfg)
     h = apply_norm(cfg.norm, layer_p["ln1"], x)
@@ -434,11 +445,11 @@ def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
 
     h = apply_norm(cfg.norm, layer_p["ln2"], x)
     if cfg.is_moe:
-        y, counts, slots, aux, z, dropped = _moe_apply(
+        y, counts, slots, aux, z, dropped, overflow = _moe_apply(
             layer_p, cfg, h, rt, plan_l, predicted_l,
             decode=(mode == "decode"), token_weight=token_weight,
-            slot_w_l=slot_w_l)
-        stats = (counts, slots, aux, z, dropped)
+            slot_w_l=slot_w_l, resched_l=resched_l)
+        stats = (counts, slots, aux, z, dropped, overflow)
     else:
         y = ffn(layer_p["ffn"], h, cfg.activation)
         stats = _zero_stats(cfg)
@@ -557,7 +568,7 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
             cache=None, cache_len=None, plan=None, predicted_idx=None,
             block_tables=None, last_pos=None, token_weight=None,
             slot_weights=None, slot_weights_back=None, slot_ready=None,
-            target_plan=None):
+            target_plan=None, resched=None):
     """Unified entry. Returns (logits, new_cache, stats_dict).
 
     mode=train:   logits (B, S, V) over the full sequence.
@@ -667,7 +678,7 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
 
         def body(h, xs):
             (layer_p, cache_l, plan_l, pred_l, slot_l, back_l, ready_l,
-             tplan_l) = xs
+             tplan_l, resched_l) = xs
             if overlap:
                 plan_l, slot_l = _migration_view(ready_l, plan_l, slot_l,
                                                  tplan_l, back_l)
@@ -677,7 +688,7 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
                 cache_len=cache_len, mode=mode, enc_out=enc_out,
                 plan_l=plan_l, predicted_l=pred_l,
                 block_tables=block_tables, token_weight=token_weight,
-                slot_w_l=slot_l)
+                slot_w_l=slot_l, resched_l=resched_l)
             return constrain_acts(h, rt, seq_shard), (new_c, st)
 
         xs = (params["layers"], cache,
@@ -686,13 +697,15 @@ def forward(params, cfg: ModelConfig, batch, rt: Runtime, *, mode: str,
               slot_weights if slot_weights is not None else _none_stack(L),
               slot_weights_back if overlap else _none_stack(L),
               slot_ready if overlap else _none_stack(L),
-              target_plan if overlap else _none_stack(L))
+              target_plan if overlap else _none_stack(L),
+              resched if resched is not None else _none_stack(L))
         x, (new_cache, layer_stats) = jax.lax.scan(body, x, xs)
         if cfg.is_moe:
-            counts, slots, aux, z, dropped = layer_stats
+            counts, slots, aux, z, dropped, overflow = layer_stats
             stats = {"expert_counts": counts, "slot_counts": slots,
                      "aux_loss": aux.sum(), "z_loss": z.sum(),
-                     "dropped": dropped}       # (L,) per-layer drop counts
+                     "dropped": dropped,       # (L,) per-layer drop counts
+                     "overflow": overflow}     # (L,) round-1 overflows
         if mode == "train":
             new_cache = None
 

@@ -1,13 +1,13 @@
 """MoE building blocks: the top-k router and the expert-parallel dispatch
 runtime (placement-aware duplication, predicted pre-routing)."""
 from repro.moe import dispatch, router
-from repro.moe.dispatch import (MoEStats, capacity, ep_moe_ffn,
-                                ep_moe_ffn_replicated, gather_replica_pool,
-                                grouped_ffn)
+from repro.moe.dispatch import (MoEStats, capacity, choose_replica_quota,
+                                ep_moe_ffn, ep_moe_ffn_replicated,
+                                gather_replica_pool, grouped_ffn)
 from repro.moe.router import RouterOutput, expert_histogram, init_router, route
 
 __all__ = [
-    "MoEStats", "RouterOutput", "capacity", "dispatch", "ep_moe_ffn",
-    "ep_moe_ffn_replicated", "expert_histogram", "gather_replica_pool",
-    "grouped_ffn", "init_router", "route", "router",
+    "MoEStats", "RouterOutput", "capacity", "choose_replica_quota",
+    "dispatch", "ep_moe_ffn", "ep_moe_ffn_replicated", "expert_histogram",
+    "gather_replica_pool", "grouped_ffn", "init_router", "route", "router",
 ]

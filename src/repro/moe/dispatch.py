@@ -48,6 +48,9 @@ class MoEStats(NamedTuple):
     dropped: jnp.ndarray         # scalar: tokens dropped by capacity
     aux_loss: jnp.ndarray
     z_loss: jnp.ndarray
+    overflow: jnp.ndarray = 0    # scalar: round-1 capacity overflows (tokens
+                                 # the reschedule rescue round tried to save;
+                                 # 0 when rescheduling is off)
 
 
 def capacity(t_local: int, top_k: int, num_slots_global: int, factor: float,
@@ -146,6 +149,46 @@ def choose_replica(plan: PlacementPlan, expert: jnp.ndarray,
     return plan.replica_table[expert, jnp.minimum(choice, plan.max_copies - 1)]
 
 
+# quota draw constants — must match repro.schedule.base (kept literal here so
+# the dispatch hot path never imports the host-side scheduler package)
+_RESCHED_Q = 1 << 16
+_RESCHED_MULT = 40503        # odd -> coprime with 2^16 -> equidistributed
+_RESCHED_EXPERT = 131
+
+
+def choose_replica_quota(plan: PlacementPlan, quota: jnp.ndarray,
+                         expert: jnp.ndarray, salt: jnp.ndarray,
+                         shift: int = 0) -> jnp.ndarray:
+    """Quota-weighted replica choice (the reschedule lever's routing map).
+
+    ``quota``: (E, C_max) int32 cumulative thresholds in [0, RESCHED_Q]
+    from ``repro.schedule`` (dead copy columns pinned to RESCHED_Q). A
+    hashed uniform draw per (token, k) is compared against the expert's
+    thresholds, so realized per-copy shares track the scheduler's quotas.
+    ``shift`` rotates the choice to the expert's next copy — the rescue
+    round uses ``shift=1`` to re-aim overflow tokens at an alternate slot.
+    """
+    u = ((salt + expert * _RESCHED_EXPERT) * _RESCHED_MULT) % _RESCHED_Q
+    choice = (quota[expert] <= u[:, None]).sum(axis=1).astype(jnp.int32)
+    n_rep = jnp.maximum(plan.n_replicas[expert], 1)
+    choice = (choice + shift) % n_rep
+    return plan.replica_table[expert, jnp.minimum(choice, plan.max_copies - 1)]
+
+
+def _global_positions(gslot: jnp.ndarray, valid: jnp.ndarray,
+                      num_classes: int) -> jnp.ndarray:
+    """First-come position of each assignment within its global slot (same
+    ordering rule as the packers, computed over ALL classes so replicated
+    ranks agree on which tokens overflow). Returns (N,) int32."""
+    N = gslot.shape[0]
+    g = jnp.where(valid, gslot, num_classes)
+    order = jnp.argsort(g)                            # stable
+    hist = jnp.zeros((num_classes + 1,), jnp.int32).at[g].add(1)
+    starts = jnp.cumsum(hist) - hist
+    pos_sorted = jnp.arange(N, dtype=jnp.int32) - starts[g[order]]
+    return jnp.zeros((N,), jnp.int32).at[order].set(pos_sorted)
+
+
 def gather_replica_pool(expert_weights: dict, plan: PlacementPlan,
                         axis_name: str) -> dict:
     """Step 1: every rank contributes one expert; all_gather the pool.
@@ -220,7 +263,8 @@ def _dispatch_round(x, gslot, valid, *, num_slots: int, ranks: int, cap: int,
 
     x: (T, d); gslot, valid: (N,) flattened (token, k) assignments with
     token index = n // K. Returns y_flat: (N, d) per-assignment outputs
-    (zeros where dropped/invalid) plus per-slot counts and drop count.
+    (zeros where dropped/invalid) plus per-slot counts, drop count and the
+    in-capacity mask (which the reschedule rescue round keys off).
     ``impl`` selects the send-buffer packer (see ``_PACKERS``).
     """
     T, d = x.shape
@@ -251,7 +295,7 @@ def _dispatch_round(x, gslot, valid, *, num_slots: int, ranks: int, cap: int,
                                 tiled=False).reshape(S * cap, d)
     y_flat = jnp.where(in_cap[:, None],
                        y_recv[jnp.minimum(dest, S * cap - 1)], 0.0)
-    return y_flat, slot_counts, dropped
+    return y_flat, slot_counts, dropped, in_cap
 
 
 def ep_moe_ffn(
@@ -269,8 +313,17 @@ def ep_moe_ffn(
     correction_cap_frac: float = 0.25,
     use_kernel: bool = False,
     slot_weights: Optional[dict] = None,  # resident per-rank (n_slots, ...) store
+    resched_quota: Optional[jnp.ndarray] = None,  # (E, C_max) int32 quotas
 ) -> Tuple[jnp.ndarray, MoEStats]:
-    """Placement-aware EP MoE FFN (see module docstring). Returns (y, stats)."""
+    """Placement-aware EP MoE FFN (see module docstring). Returns (y, stats).
+
+    With ``resched_quota`` threaded in (the token-rescheduling lever,
+    ``repro.schedule``), replica choice follows the scheduler's quotas
+    instead of blind round-robin, and capacity-overflow tokens get a second
+    *rescue* dispatch round aimed at an alternate copy — extra a2a bytes in
+    exchange for absorbed drops, which is exactly how the GPS roofline
+    costs the lever.
+    """
     T, d = x.shape
     K = moe.top_k
     E = moe.num_experts
@@ -288,27 +341,51 @@ def ep_moe_ffn(
     flat = lambda a: a.reshape(-1)
 
     impl = moe.dispatch_impl
+    overflow = jnp.zeros((), jnp.int32)
     if predicted_idx is None:
-        gslot = choose_replica(plan, flat(true_idx), flat(salt))
+        if resched_quota is None:
+            gslot = choose_replica(plan, flat(true_idx), flat(salt))
+        else:
+            gslot = choose_replica_quota(plan, resched_quota,
+                                         flat(true_idx), flat(salt))
         valid = jnp.ones((T * K,), bool)
-        y_flat, slot_counts, dropped = _dispatch_round(
+        y_flat, slot_counts, dropped, in_cap = _dispatch_round(
             x, gslot, valid, num_slots=n_slots, ranks=ep_ranks, cap=cap,
             axis_name=axis_name, slot_w=slot_w, activation=activation,
             use_kernel=use_kernel, impl=impl)
+        if resched_quota is not None:
+            # --- rescue round: re-dispatch overflow to an alternate copy --
+            miss = valid & ~in_cap
+            overflow = miss.sum()
+            cap2 = max(8, int(cap * moe.resched_cap_frac))
+            gslot2 = choose_replica_quota(plan, resched_quota,
+                                          flat(true_idx), flat(salt),
+                                          shift=1)
+            y2, slot_counts2, dropped, _ = _dispatch_round(
+                x, gslot2, miss, num_slots=n_slots, ranks=ep_ranks,
+                cap=cap2, axis_name=axis_name, slot_w=slot_w,
+                activation=activation, use_kernel=use_kernel, impl=impl)
+            y_flat = jnp.where(in_cap[:, None], y_flat, y2)
+            slot_counts = slot_counts + slot_counts2
     else:
         # --- Token-to-Expert predicted mode: round 1 on predictions -------
         pred = predicted_idx.astype(jnp.int32)
-        gslot1 = choose_replica(plan, flat(pred), flat(salt))
+        if resched_quota is None:
+            pick = lambda e, s, sh: choose_replica(plan, e, s + sh)
+        else:
+            pick = lambda e, s, sh: choose_replica_quota(
+                plan, resched_quota, e, s, shift=sh)
+        gslot1 = pick(flat(pred), flat(salt), 0)
         valid1 = jnp.ones((T * K,), bool)
-        y1, slot_counts, dropped1 = _dispatch_round(
+        y1, slot_counts, dropped1, _ = _dispatch_round(
             x, gslot1, valid1, num_slots=n_slots, ranks=ep_ranks, cap=cap,
             axis_name=axis_name, slot_w=slot_w, activation=activation,
             use_kernel=use_kernel, impl=impl)
         # --- round 2: correction for mispredicted (token, k) pairs --------
         correct = flat(pred) == flat(true_idx)
         cap2 = max(8, int(cap * correction_cap_frac))
-        gslot2 = choose_replica(plan, flat(true_idx), flat(salt) + 1)
-        y2, slot_counts2, dropped2 = _dispatch_round(
+        gslot2 = pick(flat(true_idx), flat(salt), 1)
+        y2, slot_counts2, dropped2, _ = _dispatch_round(
             x, gslot2, ~correct, num_slots=n_slots, ranks=ep_ranks, cap=cap2,
             axis_name=axis_name, slot_w=slot_w, activation=activation,
             use_kernel=use_kernel, impl=impl)
@@ -325,6 +402,7 @@ def ep_moe_ffn(
         dropped=jax.lax.psum(dropped, axis_name),
         aux_loss=jax.lax.pmean(router_out.aux_loss, axis_name),
         z_loss=jax.lax.pmean(router_out.z_loss, axis_name),
+        overflow=jax.lax.psum(overflow, axis_name),
     )
     return y, stats
 
@@ -344,6 +422,7 @@ def ep_moe_ffn_replicated(
     use_kernel: bool = False,
     tp_axis: Tuple[str, ...] = (),
     slot_weights: Optional[dict] = None,
+    resched_quota: Optional[jnp.ndarray] = None,  # (E, C_max) int32 quotas
 ) -> Tuple[jnp.ndarray, MoEStats]:
     """Decode-path EP dispatch: tokens are replicated over the model axis
     (decode batches are too small to shard over it). Each rank computes the
@@ -373,22 +452,49 @@ def ep_moe_ffn_replicated(
     rank = jax.lax.axis_index(axis_name)
     flat = lambda a: a.reshape(-1)
     salt = (jnp.arange(T, dtype=jnp.int32)[:, None] + jnp.arange(K)[None, :])
-    gslot = choose_replica(plan, flat(router_out.expert_idx), flat(salt))
+    expert_flat = flat(router_out.expert_idx)
+    if resched_quota is None:
+        gslot = choose_replica(plan, expert_flat, flat(salt))
+    else:
+        gslot = choose_replica_quota(plan, resched_quota, expert_flat,
+                                     flat(salt))
     mine = (gslot // n_slots) == rank
     token_of = jnp.arange(T * K, dtype=jnp.int32) // K
+
+    def _local_ffn(send):
+        xs = send.reshape(n_slots, cap, d)
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops
+            ys = kernel_ops.moe_gemm(xs, slot_w, activation)
+        else:
+            ys = grouped_ffn(slot_w, xs, activation)
+        return ys.reshape(n_slots * cap, d)
 
     send, in_cap, dest, _, dropped = _PACKERS[moe.dispatch_impl](
         x, token_of, gslot % n_slots, mine, num_classes=n_slots, cap=cap,
         use_kernel=use_kernel)
-    xs = send.reshape(n_slots, cap, d)
-    if use_kernel:
-        from repro.kernels import ops as kernel_ops
-        ys = kernel_ops.moe_gemm(xs, slot_w, activation)
-    else:
-        ys = grouped_ffn(slot_w, xs, activation)
-    ys = ys.reshape(n_slots * cap, d)
+    ys = _local_ffn(send)
     y_flat = jnp.where(in_cap[:, None], ys[jnp.minimum(dest, n_slots * cap - 1)],
                        0.0)
+    overflow = jnp.zeros((), jnp.int32)
+    if resched_quota is not None:
+        # Rescue round: every rank recomputes the GLOBAL first-come
+        # positions (tokens are replicated, so all ranks agree on which
+        # (token, k) pairs overflowed), then serves the subset whose
+        # alternate copy lands on one of its own slots.
+        pos = _global_positions(gslot, jnp.ones_like(mine), S)
+        miss = pos >= cap
+        overflow = miss.sum()
+        gslot2 = choose_replica_quota(plan, resched_quota, expert_flat,
+                                      flat(salt), shift=1)
+        mine2 = ((gslot2 // n_slots) == rank) & miss
+        send2, in_cap2, dest2, _, dropped = _PACKERS[moe.dispatch_impl](
+            x, token_of, gslot2 % n_slots, mine2, num_classes=n_slots,
+            cap=cap, use_kernel=use_kernel)
+        ys2 = _local_ffn(send2)
+        y2 = jnp.where(in_cap2[:, None],
+                       ys2[jnp.minimum(dest2, n_slots * cap - 1)], 0.0)
+        y_flat = y_flat + y2            # disjoint masks: miss vs in-cap
     gates = router_out.gates.astype(x.dtype)
     y = (y_flat.reshape(T, K, d) * gates[..., None]).sum(axis=1)
     # tp_axis ranks hold d_ff shards: their y's are PARTIAL sums over f;
@@ -399,11 +505,15 @@ def ep_moe_ffn_replicated(
     counts = jnp.zeros((E,), jnp.float32).at[flat(router_out.expert_idx)].add(1.0)
     slot_counts = jnp.zeros((S,), jnp.int32).at[
         jnp.minimum(gslot, S - 1)].add(in_cap.astype(jnp.int32))
+    if resched_quota is not None:
+        slot_counts = slot_counts.at[jnp.minimum(gslot2, S - 1)].add(
+            in_cap2.astype(jnp.int32))
     stats = MoEStats(
         expert_counts=counts,                       # already global (replicated)
         slot_counts=jax.lax.psum(slot_counts, axis_name),
         dropped=jax.lax.psum(dropped, axis_name),
         aux_loss=router_out.aux_loss,
         z_loss=router_out.z_loss,
+        overflow=overflow,                          # global (computed replicated)
     )
     return y, stats

@@ -49,16 +49,37 @@ class GPSAuditRecord:
     t2e_saving: float = 0.0
     baseline_total_s: float = 0.0
     best_total_s: float = 0.0
+    # ------------------------------ combined strategy space (lever choice)
+    # Fields below default so pre-lever JSONL rows stay schema-compatible.
+    lever_recommended: str = "duplicate"
+    lever_after: str = "duplicate"
+    resched_saving: float = 0.0      # best reschedule-lever predicted saving
+    resched_residual: float = 0.0    # scheduler residual imbalance fed in
+    resched_extra_frac: float = 0.0  # rescue-round a2a surcharge fed in
+    overflow_pred_frac: float = 0.0  # scheduler-predicted overflow absorbed
+    overflow_realized_frac: float = -1.0  # engine-realized (-1 = no overflow)
 
     def explain(self) -> str:
+        verdict = (self.recommended if self.recommended == "none"
+                   else f"{self.recommended}+{self.lever_recommended}")
+        running = (self.strategy_after if self.strategy_after == "none"
+                   else f"{self.strategy_after}+{self.lever_after}")
+        resched = ""
+        if self.lever_recommended in ("reschedule", "both") \
+                or self.overflow_realized_frac >= 0.0:
+            realized = ("?" if self.overflow_realized_frac < 0.0
+                        else f"{self.overflow_realized_frac:.0%}")
+            resched = (f"resched(save={self.resched_saving:.1%}, "
+                       f"absorbed pred={self.overflow_pred_frac:.0%}/"
+                       f"real={realized}) ")
         return (f"[{self.seq}] t={self.t:8.2f}s skew={self.skew_measured:.2f}"
                 f"->{self.skew_input:.2f} vol={self.volatility:.3f} "
                 f"mig={self.migration_bytes / 1e6:.2f}MB "
                 f"(hidden {self.migration_hidden_frac:.0%}, "
                 f"stall {self.migration_stall_s * 1e6:.0f}us) "
                 f"savings(dist={self.dist_only_saving:.1%}, "
-                f"t2e={self.t2e_saving:.1%}) => {self.recommended} "
-                f"[{self.gate}] running={self.strategy_after} "
+                f"t2e={self.t2e_saving:.1%}) {resched}=> {verdict} "
+                f"[{self.gate}] running={running} "
                 f"interval={self.predict_interval}")
 
 
@@ -104,4 +125,8 @@ class GPSAuditLog:
                 r.recommended == "token_to_expert" for r in self.records)),
             "gps_none_verdicts": float(sum(
                 r.recommended == "none" for r in self.records)),
+            "gps_resched_verdicts": float(sum(
+                r.recommended != "none"
+                and r.lever_recommended in ("reschedule", "both")
+                for r in self.records)),
         }

@@ -26,9 +26,10 @@ weight movement only when the plan actually changes:
                           GPS guideline and the controller hysteresis.
 """
 
-from repro.runtime.cost import (entry_bytes, migration_stall_s,
-                                overlap_chunk_budget, plan_migration_bytes,
-                                should_migrate, split_hidden_exposed)
+from repro.runtime.cost import (KindWindowEMA, entry_bytes,
+                                migration_stall_s, overlap_chunk_budget,
+                                plan_migration_bytes, should_migrate,
+                                split_hidden_exposed)
 from repro.runtime.diff import (PlanDiff, apply_diff, plan_diff, plans_equal,
                                 stacked_slot_experts)
 from repro.runtime.migrate import (LayerStagedExecutor, MigrationExecutor,
@@ -36,7 +37,8 @@ from repro.runtime.migrate import (LayerStagedExecutor, MigrationExecutor,
 from repro.runtime.store import ReplicaStore
 
 __all__ = [
-    "LayerStagedExecutor", "MigrationExecutor", "PlanDiff", "ReplicaStore",
+    "KindWindowEMA", "LayerStagedExecutor", "MigrationExecutor", "PlanDiff",
+    "ReplicaStore",
     "apply_diff", "entry_bytes", "make_migrate_step", "migrate_all",
     "migration_stall_s", "overlap_chunk_budget", "plan_diff",
     "plan_migration_bytes", "plans_equal", "should_migrate",

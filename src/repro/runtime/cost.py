@@ -67,6 +67,39 @@ def amortized_layer_stall_s(window_bytes: float, hw, *, num_layers: int,
 # overlap scheduling (async predicted-hot prefetch)
 # ---------------------------------------------------------------------------
 
+class KindWindowEMA:
+    """Per-iteration-kind EMA of the migration-free step wall time.
+
+    The overlap chunk budget is sized against the compute window of the
+    step the fills ride under — but prefill-bearing iterations run orders
+    of magnitude longer than decode-only ones, so one mixed EMA
+    overestimates the window during decode phases (overdriving the chunk
+    budget onto the serving path) and underestimates it during prefill
+    bursts (starving the drain). One EMA per kind ("prefill" / "decode")
+    sizes the budget to the step actually being shadowed; an unseeded
+    kind falls back to whatever kind has been measured (the only estimate
+    available until the first step of its own kind lands)."""
+
+    def __init__(self, beta: float = 0.9):
+        self.beta = float(beta)
+        self._v: dict = {}
+
+    def update(self, kind: str, dt: float) -> float:
+        prev = self._v.get(kind, 0.0)
+        self._v[kind] = (float(dt) if prev <= 0
+                         else self.beta * prev + (1 - self.beta) * float(dt))
+        return self._v[kind]
+
+    def window(self, kind: str) -> float:
+        w = self._v.get(kind, 0.0)
+        if w > 0:
+            return w
+        return max(self._v.values(), default=0.0)
+
+    def kinds(self) -> dict:
+        return dict(self._v)
+
+
 def overlap_chunk_budget(window_s: float, *, chunk_entries: int,
                          entry_bytes: int, hw, min_chunks: int = 1,
                          max_chunks: int = 1024) -> int:

@@ -1,0 +1,36 @@
+"""Token-level rescheduling — the second balancing lever next to expert
+duplication (ROADMAP "combined strategy space"; MicroMoE / HarMoEny refs in
+PAPERS.md).
+
+Duplication moves *weights* toward hot experts; rescheduling moves *tokens*
+toward spare capacity. The subsystem has two halves:
+
+* a host-side scheduler (this package) that turns the per-expert token
+  histogram into per-copy **quotas** — fractional shares of each expert's
+  traffic per replica, chosen to minimise the max EP-rank load subject to
+  per-slot capacity. Two implementations behind one interface:
+  ``greedy`` (waterfill over the expert x rank histogram) and ``lp``
+  (transportation-problem refinement via binary search on the load bound
+  + max-flow feasibility, dependency-free).
+* an in-graph consumer (``repro.moe.dispatch.choose_replica_quota``) that
+  reads the fixed-shape quantised quota tensor ``(E, C_max) int32`` and a
+  per-(token, k) salt to pick replicas — plus a *rescue round* that
+  re-dispatches capacity-overflow tokens to an alternate copy, which is
+  what absorbs drops at dispatch time.
+
+Quotas are *data*, never shapes: the jitted path compiles once and every
+replan window just feeds new tensors.
+"""
+
+from repro.schedule.base import (RESCHED_Q, RescheduleResult, TokenScheduler,
+                                 even_quota, even_quota_stack, even_shares,
+                                 make_scheduler, quota_realized_shares,
+                                 shares_to_quota)
+from repro.schedule.greedy import GreedyWaterfill
+from repro.schedule.lp import TransportLP
+
+__all__ = [
+    "RESCHED_Q", "RescheduleResult", "TokenScheduler", "GreedyWaterfill",
+    "TransportLP", "even_quota", "even_quota_stack", "even_shares",
+    "make_scheduler", "quota_realized_shares", "shares_to_quota",
+]

@@ -55,6 +55,15 @@ class ControllerConfig:
     # the controller simulates the production point (cf. skew transfer).
     migration_aware: bool = True
     migration_bytes_scale: float = 1.0
+    # Combined strategy space: which balancing levers the engine can drive.
+    # The default keeps the pre-lever duplicate-only arbitration (and its
+    # exact costing — replica HBM reads are only charged once a second
+    # lever exists to arbitrate against). Add "reschedule"/"both" when the
+    # engine runs the token scheduler (repro.schedule).
+    levers: tuple = ("duplicate",)
+    # Scheduler residual imbalance assumed until the engine reports a
+    # measured one via observe(resched_residual=...).
+    resched_residual_default: float = 0.05
     # Skew transfer: when the engine measures skew on a REDUCED smoke model
     # while the controller simulates the production deployment point, the
     # achievable skew caps differ (max share is bounded by top_k/E, so
@@ -77,6 +86,9 @@ class Decision:
     switched: bool
     migration_stall_s: float = 0.0  # per-layer-step stall charged this tick
     migration_hidden_frac: float = 0.0  # window fraction hidden by overlap
+    lever: str = "duplicate"        # balancing lever in force after this tick
+    lever_recommended: str = "duplicate"
+    overflow_realized_frac: float = -1.0  # window's absorbed overflow share
     report: Optional[GPSReport] = field(default=None, repr=False)
 
 
@@ -86,6 +98,7 @@ class OnlineGPSController:
     def __init__(self, model_cfg: ModelConfig, cfg: ControllerConfig = None,
                  *, predictor_available: bool = False,
                  initial_strategy: str = "dist_only",
+                 initial_lever: str = "duplicate",
                  audit: Optional[GPSAuditLog] = None):
         if not model_cfg.is_moe:
             raise ValueError("the GPS controller needs a MoE model")
@@ -93,6 +106,7 @@ class OnlineGPSController:
         self.cfg = cfg or ControllerConfig()
         self.predictor_available = predictor_available
         self.strategy = initial_strategy
+        self.lever = "none" if initial_strategy == "none" else initial_lever
         self.predict_interval = self.cfg.volatile_interval
         # every _evaluate appends its full recommend_strategy input vector
         # + outcome here (repro.obs.audit), so verdicts are replayable
@@ -105,22 +119,49 @@ class OnlineGPSController:
         self._pending_votes = 0
         self._migration_bytes = 0.0
         self._migration_hidden_bytes = 0.0
+        # token-rescheduling lever measurements (repro.schedule)
+        self._overflow_tokens = 0.0
+        self._dropped_tokens = 0.0
+        self._resched_residual: Optional[float] = None
+        self._resched_absorbed_pred: Optional[float] = None
 
     # ------------------------------------------------------------- observe
     def observe(self, counts: Optional[np.ndarray], now: float,
                 migration_bytes: float = 0.0,
-                migration_hidden_bytes: float = 0.0) -> Optional[Decision]:
+                migration_hidden_bytes: float = 0.0,
+                overflow_tokens: float = 0.0,
+                dropped_tokens: float = 0.0,
+                resched_residual: Optional[float] = None,
+                resched_absorbed_pred: Optional[float] = None,
+                ) -> Optional[Decision]:
         """Feed one iteration's (L, E) expert histogram (None for MoE-less
         iterations) plus the replica-weight bytes the engine's migration
         executor moved this iteration. ``migration_hidden_bytes`` is the
         share of those bytes whose transfer the overlapped prefetcher hid
         under forward compute — only the exposed remainder is charged to
-        duplicating strategies. Returns a Decision when a window closes,
-        else None."""
+        duplicating strategies.
+
+        Token-rescheduling measurements (all optional, repro.schedule):
+        ``overflow_tokens`` / ``dropped_tokens`` — capacity-overflow tokens
+        this iteration and how many the rescue round still dropped; their
+        window ratio is the REALIZED absorbed fraction, and overflow over
+        routed tokens prices the rescue round's extra a2a bytes.
+        ``resched_residual`` — the scheduler's leftover rank imbalance for
+        the current quota plan (``RescheduleResult.imbalance_sched - 1``).
+        ``resched_absorbed_pred`` — the scheduler's predicted absorbed
+        overflow fraction, audited against the realized one.
+
+        Returns a Decision when a window closes, else None."""
         self._iters += 1
         self._migration_bytes += float(migration_bytes)
         self._migration_hidden_bytes += min(float(migration_hidden_bytes),
                                             float(migration_bytes))
+        self._overflow_tokens += float(overflow_tokens)
+        self._dropped_tokens += float(dropped_tokens)
+        if resched_residual is not None:
+            self._resched_residual = float(resched_residual)
+        if resched_absorbed_pred is not None:
+            self._resched_absorbed_pred = float(resched_absorbed_pred)
         if counts is not None:
             c = np.asarray(counts, np.float64)
             self._counts = c if self._counts is None else self._counts + c
@@ -131,6 +172,8 @@ class OnlineGPSController:
         self._counts = None
         self._migration_bytes = 0.0
         self._migration_hidden_bytes = 0.0
+        self._overflow_tokens = 0.0
+        self._dropped_tokens = 0.0
         return decision
 
     # ------------------------------------------------------------ evaluate
@@ -174,23 +217,53 @@ class OnlineGPSController:
                 self.cfg.hardware, num_layers=self.model_cfg.num_layers,
                 window_steps=self.cfg.window_iters)
 
+        # lever costs measured this window (see observe docstring)
+        routed = float(self._counts.sum()) if self._counts is not None else 0.0
+        resched_extra_frac = (self._overflow_tokens / routed
+                              if routed > 0 else 0.0)
+        resched_residual = (self._resched_residual
+                            if self._resched_residual is not None
+                            else self.cfg.resched_residual_default)
+        overflow_realized = (1.0 - self._dropped_tokens / self._overflow_tokens
+                             if self._overflow_tokens > 0 else -1.0)
+        # replica-slot weight reads; charged only once a second lever exists
+        # to arbitrate against, so duplicate-only costing stays pre-lever.
+        dup_hbm = 0.0
+        if len(self.cfg.levers) > 1 and self.model_cfg.moe is not None:
+            from repro.core.simulator import expert_bytes
+            dup_hbm = (expert_bytes(self.model_cfg)
+                       * max(self.model_cfg.moe.duplication_slots, 0))
+
         skew_input = self._transfer_skew(skew)
         recommended, report = recommend_strategy(
             self.model_cfg, self.cfg.hardware, skew=skew_input,
             batch=self.cfg.batch, seq=self.cfg.seq,
             allow_t2e=self.predictor_available,
             min_saving=self.cfg.min_saving,
-            migration_stall_s=mig_stall)
+            migration_stall_s=mig_stall,
+            levers=tuple(self.cfg.levers),
+            resched_residual=resched_residual,
+            resched_extra_frac=resched_extra_frac,
+            dup_hbm_bytes=dup_hbm)
 
-        # hysteresis: require `patience` consecutive windows agreeing
+        # hysteresis over the COMBINED (prediction, lever) verdict: require
+        # `patience` consecutive windows agreeing on the same pair — a lever
+        # flip alone (same prediction mode) still re-wires the engine, so it
+        # gates exactly like a prediction switch.
+        rec_lever = getattr(recommended, "lever", "duplicate")
+        rec_key = (recommended if recommended == "none"
+                   else f"{recommended}+{rec_lever}")
+        cur_key = (self.strategy if self.strategy == "none"
+                   else f"{self.strategy}+{self.lever}")
         switched = False
-        if recommended != self.strategy:
-            if recommended == self._pending:
+        if rec_key != cur_key:
+            if rec_key == self._pending:
                 self._pending_votes += 1
             else:
-                self._pending, self._pending_votes = recommended, 1
+                self._pending, self._pending_votes = rec_key, 1
             if self._pending_votes >= self.cfg.patience:
-                self.strategy = recommended
+                self.strategy = str(recommended)
+                self.lever = rec_lever if recommended != "none" else "none"
                 self._pending, self._pending_votes = None, 0
                 switched = True
         else:
@@ -205,7 +278,9 @@ class OnlineGPSController:
                      recommended=recommended, strategy=self.strategy,
                      predict_interval=self.predict_interval,
                      switched=switched, migration_stall_s=mig_stall,
-                     migration_hidden_frac=hidden_frac, report=report)
+                     migration_hidden_frac=hidden_frac,
+                     lever=self.lever, lever_recommended=rec_lever,
+                     overflow_realized_frac=overflow_realized, report=report)
         self.decisions.append(d)
 
         gate = ("switched" if switched
@@ -234,7 +309,14 @@ class OnlineGPSController:
             dist_only_saving=float(report.dist_only_saving),
             t2e_saving=float(report.t2e_saving),
             baseline_total_s=float(report.baseline.total),
-            best_total_s=float(report.best.total)))
+            best_total_s=float(report.best.total),
+            lever_recommended=rec_lever,
+            lever_after=self.lever,
+            resched_saving=float(report.reschedule_saving),
+            resched_residual=float(resched_residual),
+            resched_extra_frac=float(resched_extra_frac),
+            overflow_pred_frac=float(self._resched_absorbed_pred or 0.0),
+            overflow_realized_frac=float(overflow_realized)))
         return d
 
     # ------------------------------------------------------------ reporting
@@ -244,5 +326,6 @@ class OnlineGPSController:
 
     def switch_log(self) -> List[str]:
         return [f"t={d.t:8.2f}s skew={d.skew:.2f} vol={d.volatility:.3f} "
-                f"-> {d.strategy} (interval={d.predict_interval})"
+                f"-> {d.strategy if d.strategy == 'none' else d.strategy + '+' + d.lever} "
+                f"(interval={d.predict_interval})"
                 for d in self.decisions if d.switched]

@@ -150,6 +150,14 @@ class ServeConfig:
     migrate_chunk: int = 8            # slot entries per fixed-shape fill step
                                       # (store mode; overlap follows
                                       # MoEConfig.overlap_migration)
+    # Balancing lever (combined strategy space, repro.schedule):
+    #   duplicate   re-plan + migrate replica weights every interval
+    #   reschedule  freeze the plan after its first adoption; rebalance by
+    #               moving TOKENS across the frozen plan's copies (quota
+    #               dispatch + overflow rescue round, no migration traffic)
+    #   both        migrate on the interval AND token-schedule the residual
+    lever: str = "duplicate"
+    resched_impl: str = "greedy"      # greedy | lp (repro.schedule)
 
 
 class ServeEngine(_OverlapStoreMixin):
@@ -167,6 +175,11 @@ class ServeEngine(_OverlapStoreMixin):
         self.batches_seen = 0
         self._plan_stack: Optional[PlacementPlan] = None
         self.history: List[Dict] = []         # per-batch balance telemetry
+        # token rescheduling (repro.schedule): quota stack traced like the
+        # plan; None when the duplicate lever runs alone
+        self._resched_stack = None
+        self._resched_sched = None
+        self._resched_frozen = False
         self._store = None                    # repro.runtime.ReplicaStore
         self._migrate_fn = None
         self._executor = None                 # LayerStagedExecutor (overlap)
@@ -213,10 +226,18 @@ class ServeEngine(_OverlapStoreMixin):
         return stack_plans(plans)
 
     def replan(self) -> Optional[PlacementPlan]:
-        """Algorithm 1 per layer from the current distribution estimate."""
+        """Algorithm 1 per layer from the current distribution estimate.
+
+        Lever "reschedule" adopts ONE plan and freezes it (later re-plans
+        only refresh the token-scheduler quotas — zero migration traffic);
+        "both" re-plans every interval AND refreshes quotas."""
         if not self.cfg.is_moe or self.serve.strategy == "none":
             return self._identity_stack()
         m = self.moe_cfg
+        if (self.serve.lever == "reschedule" and self._resched_frozen
+                and self._plan_stack is not None):
+            self._replan_resched()
+            return self._plan_stack
         dist = self.estimator.predict()                  # (L, E)
         plans = []
         for l in range(self.cfg.num_layers):
@@ -224,7 +245,46 @@ class ServeEngine(_OverlapStoreMixin):
                                          m.duplication_slots, m.max_copies)
             plans.append(res.plan)
         self._plan_stack = self._adopt_plan(stack_plans(plans))
+        if self.serve.lever == "reschedule":
+            self._resched_frozen = True
+        self._replan_resched()
         return self._plan_stack
+
+    def _replan_resched(self):
+        """Refresh the (L, E, C_max) quota stack against the plan in force
+        (see ``ContinuousEngine._replan_resched``)."""
+        if (self.serve.lever == "duplicate" or not self.cfg.is_moe
+                or self.serve.strategy == "none"):
+            self._resched_stack = None
+            return
+        from repro.moe.dispatch import capacity
+        from repro.schedule import make_scheduler
+        m = self.moe_cfg
+        plan = self._current_plan()
+        if plan is None:
+            self._resched_stack = None
+            return
+        if self._resched_sched is None:
+            self._resched_sched = make_scheduler(self.serve.resched_impl)
+        dist = np.asarray(self.estimator.predict(), np.float64)
+        tokens = float(getattr(self, "_last_prefill_tokens", 0) or 1024)
+        counts = dist * tokens * m.top_k
+        t_local = max(int(tokens) // self.ep_ranks, 1)
+        n_slots_g = (m.num_experts // self.ep_ranks
+                     + m.duplication_slots) * self.ep_ranks
+        cap = capacity(t_local, m.top_k, n_slots_g,
+                       m.capacity_factor) * self.ep_ranks
+        layer_plans = [jax.tree.map(lambda a, l=l: np.asarray(a)[l], plan)
+                       for l in range(self.cfg.num_layers)]
+        quota, results = self._resched_sched.plan_stack(
+            counts, layer_plans, ep_ranks=self.ep_ranks,
+            dup_slots=m.duplication_slots, cap=float(cap))
+        self._resched_stack = jnp.asarray(quota)
+        if self.history:
+            self.history[-1]["resched_absorbed_pred"] = float(np.mean(
+                [r.overflow_absorbed_frac for r in results]))
+            self.history[-1]["resched_residual"] = float(np.mean(
+                [r.imbalance_sched for r in results])) - 1.0
 
     # --------------------------------------------------------- replica store
     @property
@@ -393,6 +453,7 @@ class ServeEngine(_OverlapStoreMixin):
         slot_w = self._slot_weights_arg()
         plan = self._current_plan()
         back_w, ready, tplan = self._overlap_args()
+        self._last_prefill_tokens = B * S
         ctx = self.mesh or _nullcontext()
         with ctx:
             if getattr(self, "_in_graph", False):
@@ -402,7 +463,7 @@ class ServeEngine(_OverlapStoreMixin):
             else:
                 logits, cache, stats = prefill_step(
                     self.params, batch, cache, plan, pred, slot_w,
-                    back_w, ready, tplan)
+                    back_w, ready, tplan, self._resched_stack)
         self._observe(stats, num_tokens=B * S,
                       skip_replan=getattr(self, "_in_graph", False))
         dt = _time.perf_counter() - t0
@@ -425,7 +486,7 @@ class ServeEngine(_OverlapStoreMixin):
             with ctx:
                 next_tok, logits, cache, stats = decode_step(
                     self.params, tokens, cache, cache_len, plan, slot_w,
-                    back_w, ready, tplan)
+                    back_w, ready, tplan, self._resched_stack)
         return next_tok, logits, cache, stats
 
     def _note_step_time(self, dt: float):
@@ -469,6 +530,9 @@ class ServeEngine(_OverlapStoreMixin):
         tele = {"batch": self.batches_seen,
                 "skew": float(counts.sum(0).max()
                               / max(counts.sum(0).mean(), 1e-9))}
+        for key in ("dropped", "overflow"):
+            if stats.get(key) is not None:
+                tele[key] = float(np.asarray(stats[key]).sum())
         self.history.append(tele)
         if (not skip_replan and self.serve.strategy != "none"
                 and self.batches_seen % self.serve.predict_interval == 0):
@@ -541,6 +605,14 @@ class ContinuousConfig:
     overlap_migration: Optional[bool] = None
     prefetch_lead: int = 2            # iterations before the boundary to
                                       # pre-begin (0 = no predictive start)
+    # Balancing lever (combined strategy space, repro.schedule): initial;
+    # the controller may switch it when ControllerConfig.levers offers more
+    # than the duplicate lever. "reschedule" freezes the plan after its
+    # first adoption and rebalances by moving TOKENS across the frozen
+    # copies (quota dispatch + rescue round); "both" migrates on the
+    # interval AND token-schedules the residual.
+    lever: str = "duplicate"          # duplicate | reschedule | both
+    resched_impl: str = "greedy"      # greedy | lp (repro.schedule)
 
     def __post_init__(self):
         if self.prefill_len % self.block_size:
@@ -599,9 +671,26 @@ class ContinuousEngine(_OverlapStoreMixin):
         self.controller = controller
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.strategy = ccfg.strategy
+        self.lever = ccfg.lever
         self.predict_interval = ccfg.predict_interval
         self.iterations = 0
         self._plan_stack: Optional[PlacementPlan] = None
+        # token rescheduling (repro.schedule): the quota stack is a traced
+        # argument like the plan, so quota re-plans never recompile. Both
+        # jit signatures (quota absent / present) compile in warmup when
+        # the lever is available, so a runtime lever switch is shape-free.
+        self._resched_enabled = cfg.is_moe and (
+            ccfg.lever in ("reschedule", "both")
+            or (controller is not None
+                and any(l != "duplicate"
+                        for l in getattr(controller.cfg, "levers", ()))))
+        self._resched_stack = None          # (L, E, C_max) int32 device array
+        self._resched_sched = None          # TokenScheduler, built lazily
+        self._resched_frozen = False        # reschedule lever adopted a plan
+        self._resched_residual = None       # last plan's leftover imbalance
+        self._resched_absorbed_pred = None  # last plan's predicted absorption
+        self._step_overflow = 0.0
+        self._step_dropped = 0.0
 
         if cfg.is_moe:
             dup_slots = ccfg.dup_slots
@@ -658,8 +747,12 @@ class ContinuousEngine(_OverlapStoreMixin):
         self._migrate_fn = None
         self._entry_bytes = 0
         self._recent_step_s = 0.0          # EMA over ALL steps
-        self._recent_serve_s = 0.0         # EMA over migration-free steps
-                                           # (the overlap window)
+        # overlap window: EMA over migration-free steps, split by iteration
+        # kind — prefill-bearing steps offer a much larger window than
+        # decode-only ones (repro.runtime.cost.KindWindowEMA)
+        from repro.runtime import KindWindowEMA
+        self._serve_ema = KindWindowEMA()
+        self._step_kind = "decode"
         self._step_migration_bytes = 0.0
         self._step_migration_hidden_bytes = 0.0
         self._idle_ready = None            # cached all-False ready mask
@@ -710,15 +803,79 @@ class ContinuousEngine(_OverlapStoreMixin):
         return self._plan_stack
 
     def replan(self):
-        """Algorithm 1 per layer from the estimator's current prediction."""
+        """Algorithm 1 per layer from the estimator's current prediction.
+
+        Lever semantics: "duplicate" and "both" adopt a fresh plan every
+        boundary (migrating changed slots); "reschedule" adopts ONE plan
+        (the first boundary's, so there are replica copies to schedule
+        across) and then freezes it — later boundaries only recompute the
+        token-scheduler quotas, so the steady state pays zero migration
+        traffic. Quotas are refreshed for any resched lever."""
         if not self.cfg.is_moe or self.strategy == "none":
-            return self._adopt_plan(self._identity_stack())
+            out = self._adopt_plan(self._identity_stack())
+            self._resched_stack = None
+            return out
         m = self.moe_cfg
+        if (self.lever == "reschedule" and self._resched_frozen
+                and self._plan_stack is not None):
+            self._replan_resched()
+            return self._plan_stack
         dist = self.estimator.predict()
         plans = [duplicate_experts_host(dist[l], self.ep_ranks,
                                         m.duplication_slots, m.max_copies).plan
                  for l in range(self.cfg.num_layers)]
-        return self._adopt_plan(stack_plans(plans))
+        out = self._adopt_plan(stack_plans(plans))
+        if self.lever == "reschedule":
+            self._resched_frozen = True
+        self._replan_resched()
+        return out
+
+    def _replan_resched(self):
+        """Recompute the (L, E, C_max) quota stack from the estimator's
+        distribution against the plan currently IN FORCE (a staged
+        migration's target adopts later; the rescue round covers the
+        transient). Quotas are host-side microseconds per boundary."""
+        if (not self._resched_enabled or self.lever == "duplicate"
+                or self.strategy == "none" or not self.cfg.is_moe):
+            self._resched_stack = None
+            return
+        from repro.moe.dispatch import capacity
+        from repro.schedule import make_scheduler
+        m = self.moe_cfg
+        plan = self._current_plan()
+        if plan is None:
+            self._resched_stack = None
+            return
+        if self._resched_sched is None:
+            self._resched_sched = make_scheduler(self.ccfg.resched_impl)
+        dist = np.asarray(self.estimator.predict(), np.float64)   # (L, E)
+        # token units: the prefill bucket's routed (token, k) pairs; the
+        # scheduler only needs counts and cap on the same scale
+        counts = dist * float(self.ccfg.prefill_len * m.top_k)
+        t_local = max(self.ccfg.prefill_len // self.ep_ranks, 1)
+        n_slots_g = (m.num_experts // self.ep_ranks
+                     + m.duplication_slots) * self.ep_ranks
+        cap = capacity(t_local, m.top_k, n_slots_g,
+                       m.capacity_factor) * self.ep_ranks
+        layer_plans = [jax.tree.map(lambda a, l=l: np.asarray(a)[l], plan)
+                       for l in range(self.cfg.num_layers)]
+        quota, results = self._resched_sched.plan_stack(
+            counts, layer_plans, ep_ranks=self.ep_ranks,
+            dup_slots=m.duplication_slots, cap=float(cap))
+        self._resched_stack = jnp.asarray(quota)
+        self._resched_residual = float(np.mean(
+            [r.imbalance_sched for r in results])) - 1.0
+        self._resched_absorbed_pred = float(np.mean(
+            [r.overflow_absorbed_frac for r in results]))
+        self.metrics.record_resched(
+            planned=True, absorbed_pred=self._resched_absorbed_pred,
+            residual=self._resched_residual)
+        self.tracer.instant(
+            "resched.plan", cat="plan", track="plan",
+            args={"iteration": self.iterations,
+                  "impl": self.ccfg.resched_impl,
+                  "residual": self._resched_residual,
+                  "absorbed_pred": self._resched_absorbed_pred})
 
     # ------------------------------------------------------ replica migration
     def _hw(self):
@@ -727,11 +884,14 @@ class ContinuousEngine(_OverlapStoreMixin):
 
     def _overlap_window_s(self) -> float:
         """The overlap window one engine step offers a staged fill: the
-        measured NON-migration step time (EMA over steps that issued no
-        chunks), falling back to the whole-step EMA and then to the
-        profiled per-layer dispatch phase total."""
-        if self._recent_serve_s > 0:
-            return self._recent_serve_s
+        measured NON-migration step time for the CURRENT iteration kind
+        (prefill-bearing vs decode-only steps differ by orders of
+        magnitude, so the EMA is split per kind), falling back to the
+        whole-step EMA and then to the profiled per-layer dispatch phase
+        total."""
+        w = self._serve_ema.window(self._step_kind)
+        if w > 0:
+            return w
         if self._recent_step_s > 0:
             return self._recent_step_s
         per_layer = self.metrics.phase_times.get("total", 0.0)
@@ -981,6 +1141,14 @@ class ContinuousEngine(_OverlapStoreMixin):
         preds = [None]
         if self.predictor is not None:
             preds.append(self._shape_predictions(toks))
+        rescheds = [None]
+        if self._resched_enabled:
+            # the quota variant is its own jit signature: compile it now so
+            # a runtime lever switch (controller or config) never recompiles
+            from repro.schedule import even_quota_stack
+            rescheds.append(jnp.asarray(even_quota_stack(
+                self.cfg.num_layers, jax.tree.map(lambda a: np.asarray(a)[0],
+                                                  plan))))
         slot_w = self._store.weights if self._store is not None else None
         ctx = self.mesh or _nullcontext()
         with ctx:
@@ -994,10 +1162,11 @@ class ContinuousEngine(_OverlapStoreMixin):
                     self.params["layers"]["moe"]["experts"],
                     z, z, z, jnp.zeros((self.ccfg.migrate_chunk,), bool)))
             for pred in preds:
-                _, _, temp, _ = jax.block_until_ready(self._prefill_fn(
-                    self.params, {"tokens": jnp.asarray(toks)},
-                    self._temp_cache, plan, pred, last, jnp.asarray(tw),
-                    slot_w, back_w, ready, tplan))
+                for resched in rescheds:
+                    _, _, temp, _ = jax.block_until_ready(self._prefill_fn(
+                        self.params, {"tokens": jnp.asarray(toks)},
+                        self._temp_cache, plan, pred, last, jnp.asarray(tw),
+                        slot_w, back_w, ready, tplan, resched))
             dec_toks = jnp.zeros((ccfg.max_slots, 1), jnp.int32)
             tables = jnp.zeros(
                 (ccfg.max_slots, self.scheduler.tables.max_blocks_per_slot),
@@ -1007,13 +1176,14 @@ class ContinuousEngine(_OverlapStoreMixin):
             # run the steady-state write -> decode cycle TWICE: under a
             # mesh the pool's sharding layout settles only after the first
             # decode, and each distinct input layout is its own jit entry
-            for _ in range(2):
-                self.pool = jax.block_until_ready(
-                    self._write_fn(self.pool, temp, table))
-                out = self._decode_fn(self.params, dec_toks, self.pool,
-                                      tables, lens, plan, aw, slot_w,
-                                      back_w, ready, tplan)
-                self.pool = jax.block_until_ready(out[2])
+            for resched in rescheds:
+                for _ in range(2):
+                    self.pool = jax.block_until_ready(
+                        self._write_fn(self.pool, temp, table))
+                    out = self._decode_fn(self.params, dec_toks, self.pool,
+                                          tables, lens, plan, aw, slot_w,
+                                          back_w, ready, tplan, resched)
+                    self.pool = jax.block_until_ready(out[2])
             if self.mesh is not None:
                 self._warm_converts()
         if self.mesh is not None:
@@ -1031,6 +1201,8 @@ class ContinuousEngine(_OverlapStoreMixin):
                 # prefetcher's published histogram
                 self.metrics.migration = dict.fromkeys(
                     self.metrics.migration, 0.0)
+                self.metrics.resched = dict.fromkeys(
+                    self.metrics.resched, 0.0)
                 self._pred_counts = None
         self._warm = True
         self._compile_baseline = self.compile_counts()
@@ -1053,7 +1225,13 @@ class ContinuousEngine(_OverlapStoreMixin):
             # the overlapped-migration ready mask (np bool (L,) -> device)
             jnp.asarray(np.zeros((self.cfg.num_layers,), bool)),
             jnp.zeros((self.cfg.num_layers,), bool),
-        ))
+        ) + ((
+            # the np int32 quota-stack -> device conversion (re-plans build
+            # quotas on the host every boundary)
+            jnp.asarray(np.zeros((self.cfg.num_layers,
+                                  self.moe_cfg.num_experts,
+                                  self.moe_cfg.max_copies), np.int32)),
+        ) if self._resched_enabled else ()))
 
     def compile_counts(self) -> Dict[str, int]:
         """Compilation state for the no-recompile check: per-step-function
@@ -1155,8 +1333,12 @@ class ContinuousEngine(_OverlapStoreMixin):
         step_span.__enter__()
         self._step_migration_bytes = 0.0
         self._step_migration_hidden_bytes = 0.0
+        self._step_overflow = 0.0
+        self._step_dropped = 0.0
         self._tick_migration()       # commit BEFORE this iteration's plan read
         plan = self._current_plan()
+        resched = (self._resched_stack
+                   if self.lever in ("reschedule", "both") else None)
         slot_w = self._store.weights if self._store is not None else None
         back_w, ready, tplan = self._overlap_args()
 
@@ -1165,6 +1347,7 @@ class ContinuousEngine(_OverlapStoreMixin):
             adm.set_args(prefills=len(splan.prefills),
                          decode_slots=len(splan.decode_slots),
                          preempted=len(splan.preempted))
+        self._step_kind = "prefill" if splan.prefills else "decode"
 
         # ---------------------------------------------------------- prefill
         for req in splan.prefills:
@@ -1186,7 +1369,7 @@ class ContinuousEngine(_OverlapStoreMixin):
                 next_tok, _, temp, stats = self._prefill_fn(
                     self.params, {"tokens": jnp.asarray(toks)},
                     self._temp_cache, plan, pred, last, jnp.asarray(tw),
-                    slot_w, back_w, ready, tplan)
+                    slot_w, back_w, ready, tplan, resched)
                 self.pool = self._write_fn(self.pool, temp, table)
             tok0 = int(np.asarray(next_tok)[0, 0])
             req.generated.append(tok0)
@@ -1218,7 +1401,8 @@ class ContinuousEngine(_OverlapStoreMixin):
                         self.params, jnp.asarray(self._last_tokens[:, None]),
                         self.pool, jnp.asarray(sched.tables.tables),
                         jnp.asarray(sched.tables.lengths), plan,
-                        jnp.asarray(active), slot_w, back_w, ready, tplan)
+                        jnp.asarray(active), slot_w, back_w, ready, tplan,
+                        resched)
             nt = np.asarray(next_tok)
             for slot in decode_slots:
                 req = sched.slots[slot]
@@ -1266,12 +1450,23 @@ class ContinuousEngine(_OverlapStoreMixin):
                 self.accuracy.begin_window(
                     self._predicted_dist() if self.strategy != "none"
                     else None, self.strategy)
+        if self.cfg.is_moe and (self._step_overflow or self._step_dropped):
+            # rescue-round a2a surcharge: each overflow (token, k) pair is
+            # re-dispatched once — activation there and back in bf16
+            self.metrics.record_resched(
+                overflow_tokens=self._step_overflow,
+                dropped_tokens=self._step_dropped,
+                extra_a2a_bytes=self._step_overflow * self.cfg.d_model * 2 * 2)
         decision = None
         if self.controller is not None and self.cfg.is_moe:
             decision = self.controller.observe(
                 iter_counts, now,
                 migration_bytes=self._step_migration_bytes,
-                migration_hidden_bytes=self._step_migration_hidden_bytes)
+                migration_hidden_bytes=self._step_migration_hidden_bytes,
+                overflow_tokens=self._step_overflow,
+                dropped_tokens=self._step_dropped,
+                resched_residual=self._resched_residual,
+                resched_absorbed_pred=self._resched_absorbed_pred)
             if decision is not None:
                 self.tracer.instant(
                     "gps.decision", cat="gps", track="gps",
@@ -1299,10 +1494,10 @@ class ContinuousEngine(_OverlapStoreMixin):
             # WALL clock, not the driver's virtual clock — the window is a
             # physical property of the forward pass, and frozen-clock
             # drivers (tests, fixed-rate replay) would otherwise report 0.
+            # Keyed by iteration kind: a decode-only step must not inherit
+            # a prefill-sized window (and vice versa).
             wall = _time.perf_counter() - t_wall0
-            self._recent_serve_s = (
-                wall if self._recent_serve_s <= 0
-                else 0.9 * self._recent_serve_s + 0.1 * wall)
+            self._serve_ema.update(self._step_kind, wall)
         self.metrics.record_iteration(
             now, dt, prefill_tokens=prefill_tokens,
             decode_tokens=len(decode_slots),
@@ -1319,6 +1514,8 @@ class ContinuousEngine(_OverlapStoreMixin):
     def _accumulate(self, acc, stats):
         if not self.cfg.is_moe or stats.get("expert_counts") is None:
             return acc
+        self._step_dropped += float(np.asarray(stats.get("dropped", 0)).sum())
+        self._step_overflow += float(np.asarray(stats.get("overflow", 0)).sum())
         c = np.asarray(stats["expert_counts"], np.float64)
         return c if acc is None else acc + c
 
@@ -1338,8 +1535,17 @@ class ContinuousEngine(_OverlapStoreMixin):
             events.completed.append(req)
 
     def _apply_decision(self, decision):
-        if decision.strategy != self.strategy:
+        lever = getattr(decision, "lever", "duplicate")
+        lever_changed = (self._resched_enabled and lever != self.lever
+                         and decision.strategy != "none"
+                         and lever in ("duplicate", "reschedule", "both"))
+        if decision.strategy != self.strategy or lever_changed:
             self.strategy = decision.strategy
+            if lever_changed:
+                self.lever = lever
+                # a fresh reschedule tenure freezes the NEXT adopted plan,
+                # not whatever an older tenure froze
+                self._resched_frozen = False
             # replan() handles "none" too (identity stack through
             # _adopt_plan, which also cancels any in-flight migration —
             # a direct _plan_stack write here would let a stale commit

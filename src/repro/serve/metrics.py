@@ -151,6 +151,14 @@ class ServeMetrics:
             "hidden_s": 0.0, "exposed_s": 0.0,
             "replans": 0.0, "commits": 0.0, "rejected": 0.0,
             "prebegun": 0.0, "cancelled": 0.0}
+        # token-rescheduling accounting (repro.schedule): capacity-overflow
+        # tokens seen at dispatch, how many the rescue round still dropped,
+        # the rescue round's extra a2a bytes, and the scheduler's per-plan
+        # predictions (absorbed overflow fraction, residual imbalance)
+        self.resched: Dict[str, float] = {
+            "overflow_tokens": 0.0, "dropped_tokens": 0.0,
+            "resched_a2a_bytes": 0.0, "plans": 0.0,
+            "absorbed_pred_sum": 0.0, "residual_sum": 0.0}
         self._win_counts: Optional[np.ndarray] = None
         self._win: Optional[WindowRecord] = None
         self._t0: Optional[float] = None
@@ -239,6 +247,26 @@ class ServeMetrics:
         m["prebegun"] += bool(prebegun)
         m["cancelled"] += bool(cancelled)
 
+    # ---------------------------------------------------------- rescheduling
+    def record_resched(self, *, overflow_tokens: float = 0.0,
+                       dropped_tokens: float = 0.0,
+                       extra_a2a_bytes: float = 0.0,
+                       planned: bool = False,
+                       absorbed_pred: float = 0.0,
+                       residual: float = 0.0):
+        """Account token-rescheduling activity: per-iteration overflow /
+        rescue-drop counts and the rescue round's extra a2a bytes, plus
+        (``planned=True``) one scheduler quota-plan event with its
+        predicted absorbed-overflow fraction and residual imbalance."""
+        r = self.resched
+        r["overflow_tokens"] += float(overflow_tokens)
+        r["dropped_tokens"] += float(dropped_tokens)
+        r["resched_a2a_bytes"] += float(extra_a2a_bytes)
+        if planned:
+            r["plans"] += 1.0
+            r["absorbed_pred_sum"] += float(absorbed_pred)
+            r["residual_sum"] += float(residual)
+
     # ---------------------------------------------------------- per-request
     def record_completion(self, t: RequestTiming):
         self.timings.append(t)
@@ -287,8 +315,23 @@ class ServeMetrics:
         phase_cols = {f"phase_{k}_us": v * 1e6
                       for k, v in self.phase_times.items()}
         mig = self.migration
+        rs = self.resched
+        # realized absorbed fraction: of the overflow tokens the dispatch
+        # saw, how many the rescue round kept (1.0 when nothing overflowed
+        # — there was nothing to absorb and nothing was dropped)
+        absorbed = (1.0 - rs["dropped_tokens"] / rs["overflow_tokens"]
+                    if rs["overflow_tokens"] > 0 else 1.0)
         out = {
             **phase_cols,
+            "dropped_tokens": rs["dropped_tokens"],
+            "overflow_tokens": rs["overflow_tokens"],
+            "resched_a2a_bytes": rs["resched_a2a_bytes"],
+            "overflow_absorbed_frac": absorbed,
+            "resched_plans": rs["plans"],
+            "resched_absorbed_pred": (rs["absorbed_pred_sum"] / rs["plans"]
+                                      if rs["plans"] > 0 else 0.0),
+            "resched_residual": (rs["residual_sum"] / rs["plans"]
+                                 if rs["plans"] > 0 else 0.0),
             "migration_planned_bytes": mig["planned_bytes"],
             "migration_bytes_moved": mig["bytes_moved"],
             "migration_stall_us": mig["stall_s"] * 1e6,

@@ -43,6 +43,8 @@ SUMMARY_METRICS = (
     "ttft_p50", "ttft_p99", "tpot_mean", "tpot_p99", "latency_p50",
     "latency_p99", "migration_replans", "migration_bytes_moved",
     "migration_stall_us", "migration_rejected",
+    "dropped_tokens", "overflow_tokens", "overflow_absorbed_frac",
+    "resched_a2a_bytes", "resched_plans",
 )
 
 
@@ -60,6 +62,12 @@ def run_point(point: SweepPoint, *, smoke: bool = True, trace_out: str = "",
     if point.reduced:
         cfg = cfg.reduced()
 
+    # lever legs of the strategy axis: keep dist_only prediction, drive
+    # the token-rescheduling lever (matrix.LEVER_STRATEGIES)
+    strategy, lever = point.strategy, "duplicate"
+    if strategy in ("reschedule", "both"):
+        strategy, lever = "dist_only", point.strategy
+
     mesh, ep_ranks = None, point.mesh.model
     if point.mesh.devices > 1:
         if jax.device_count() < point.mesh.devices:
@@ -71,7 +79,7 @@ def run_point(point: SweepPoint, *, smoke: bool = True, trace_out: str = "",
         mesh = make_dev_mesh(point.mesh.data, point.mesh.model)
 
     predictor = None
-    if point.strategy == "token_to_expert":
+    if strategy == "token_to_expert":
         from repro.core.predictors import ConditionalProbabilityModel
         from repro.data.synthetic import make_routing_trace
         prof = make_routing_trace(
@@ -91,7 +99,7 @@ def run_point(point: SweepPoint, *, smoke: bool = True, trace_out: str = "",
 
     tracer = SpanTracer(process_name=f"sweep:{point.key}") \
         if trace_out else None
-    ccfg = ContinuousConfig(strategy=point.strategy, **shape)
+    ccfg = ContinuousConfig(strategy=strategy, lever=lever, **shape)
     params = init_model(jax.random.PRNGKey(point.seed), cfg)
     eng = ContinuousEngine(cfg, params, ccfg, mesh=mesh, ep_ranks=ep_ranks,
                            predictor=predictor, tracer=tracer)

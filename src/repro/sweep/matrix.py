@@ -111,23 +111,32 @@ class SweepSpec:
             strategies=pick(self.strategies, strategies, "strategy"))
 
 
-# The CI smoke tier: 2 meshes x 2 workloads = 4 points (the acceptance
-# floor), one EP-only mesh and one data x EP mesh so the topology term in
-# step time is exercised, against a steady and a skew-shifting trace.
+# Strategy axis values that are really balancing LEVERS: the job keeps
+# the dist_only prediction mode and drives the token-rescheduling lever
+# instead (repro.schedule). Kept on the same axis so the trend database
+# files duplicate-vs-reschedule runs as sibling series of one sweep.
+LEVER_STRATEGIES = ("reschedule", "both")
+
+# The CI smoke tier: 2 meshes x 2 workloads (the acceptance floor), one
+# EP-only mesh and one data x EP mesh so the topology term in step time
+# is exercised, against a steady and a skew-shifting trace — each point
+# also run with the reschedule / duplicate+reschedule levers so the
+# combined strategy space has trend series from day one.
 SMOKE_SPEC = SweepSpec(
     archs=("mixtral-8x7b",),
     meshes=(MeshShape(1, 4), MeshShape(2, 4)),
     workloads=("steady", "skew_shift"),
-    strategies=("dist_only",),
+    strategies=("dist_only",) + LEVER_STRATEGIES,
 )
 
 # The cluster tier (k8s manifests / nightly): wider meshes, every
 # workload dynamic, both prediction strategies — the configuration
-# regimes across which the paper says the optimal strategy flips.
+# regimes across which the paper says the optimal strategy flips — plus
+# the combined-lever legs.
 FULL_SPEC = SweepSpec(
     archs=("mixtral-8x7b",),
     meshes=(MeshShape(1, 4), MeshShape(2, 2), MeshShape(2, 4),
             MeshShape(2, 8)),
     workloads=("steady", "skew_shift", "diurnal", "multi_tenant"),
-    strategies=("dist_only", "token_to_expert"),
+    strategies=("dist_only", "token_to_expert") + LEVER_STRATEGIES,
 )

@@ -91,14 +91,15 @@ def make_prefill_step(cfg: ModelConfig, rt: Runtime):
     covers idle and in-flight steps alike."""
     def prefill_step(params, batch, cache, plan=None, predicted_idx=None,
                      slot_weights=None, slot_weights_back=None,
-                     slot_ready=None, target_plan=None):
+                     slot_ready=None, target_plan=None, resched=None):
         logits, cache, stats = forward(params, cfg, batch, rt, mode="prefill",
                                        cache=cache, plan=plan,
                                        predicted_idx=predicted_idx,
                                        slot_weights=slot_weights,
                                        slot_weights_back=slot_weights_back,
                                        slot_ready=slot_ready,
-                                       target_plan=target_plan)
+                                       target_plan=target_plan,
+                                       resched=resched)
         return logits, cache, stats
     return prefill_step
 
@@ -143,7 +144,7 @@ def make_slot_prefill_step(cfg: ModelConfig, rt: Runtime):
     def prefill_step(params, batch, cache, plan=None, predicted_idx=None,
                      last_pos=None, token_weight=None, slot_weights=None,
                      slot_weights_back=None, slot_ready=None,
-                     target_plan=None):
+                     target_plan=None, resched=None):
         logits, cache, stats = forward(params, cfg, batch, rt, mode="prefill",
                                        cache=cache, plan=plan,
                                        predicted_idx=predicted_idx,
@@ -152,7 +153,8 @@ def make_slot_prefill_step(cfg: ModelConfig, rt: Runtime):
                                        slot_weights=slot_weights,
                                        slot_weights_back=slot_weights_back,
                                        slot_ready=slot_ready,
-                                       target_plan=target_plan)
+                                       target_plan=target_plan,
+                                       resched=resched)
         next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
         return next_tok, logits, cache, stats
     return prefill_step
@@ -167,7 +169,7 @@ def make_paged_decode_step(cfg: ModelConfig, rt: Runtime):
     def decode_step(params, tokens, pool, block_tables, lengths, plan=None,
                     token_weight=None, slot_weights=None,
                     slot_weights_back=None, slot_ready=None,
-                    target_plan=None):
+                    target_plan=None, resched=None):
         logits, pool, stats = forward(params, cfg, {"tokens": tokens}, rt,
                                       mode="decode", cache=pool,
                                       cache_len=lengths, plan=plan,
@@ -176,7 +178,8 @@ def make_paged_decode_step(cfg: ModelConfig, rt: Runtime):
                                       slot_weights=slot_weights,
                                       slot_weights_back=slot_weights_back,
                                       slot_ready=slot_ready,
-                                      target_plan=target_plan)
+                                      target_plan=target_plan,
+                                      resched=resched)
         next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
         return next_tok, logits, pool, stats
     return decode_step
@@ -185,14 +188,15 @@ def make_paged_decode_step(cfg: ModelConfig, rt: Runtime):
 def make_decode_step(cfg: ModelConfig, rt: Runtime):
     def decode_step(params, tokens, cache, cache_len, plan=None,
                     slot_weights=None, slot_weights_back=None,
-                    slot_ready=None, target_plan=None):
+                    slot_ready=None, target_plan=None, resched=None):
         logits, cache, stats = forward(params, cfg, {"tokens": tokens}, rt,
                                        mode="decode", cache=cache,
                                        cache_len=cache_len, plan=plan,
                                        slot_weights=slot_weights,
                                        slot_weights_back=slot_weights_back,
                                        slot_ready=slot_ready,
-                                       target_plan=target_plan)
+                                       target_plan=target_plan,
+                                       resched=resched)
         next_tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
         return next_tok, logits, cache, stats
     return decode_step

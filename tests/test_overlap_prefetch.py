@@ -165,6 +165,46 @@ def test_overlap_chunk_budget_scales_with_window():
     assert overlap_chunk_budget(1e9, **kw, max_chunks=64) == 64
 
 
+def test_kind_window_ema_splits_prefill_and_decode():
+    """Satellite: the overlap chunk budget must be sized against the
+    iteration KIND being shadowed — one mixed EMA lets multi-ms prefill
+    walls inflate the decode window by orders of magnitude."""
+    from repro.runtime import KindWindowEMA
+    ema = KindWindowEMA(beta=0.5)
+    # decode window falls back to the only seeded kind until measured
+    ema.update("prefill", 0.100)
+    assert ema.window("decode") == pytest.approx(0.100)
+    ema.update("decode", 0.002)
+    assert ema.window("decode") == pytest.approx(0.002)
+    assert ema.window("prefill") == pytest.approx(0.100)
+    # each kind's EMA evolves independently of the other's samples
+    ema.update("decode", 0.004)
+    assert ema.window("decode") == pytest.approx(0.003)
+    assert ema.window("prefill") == pytest.approx(0.100)
+    assert set(ema.kinds()) == {"prefill", "decode"}
+
+
+def test_continuous_engine_tracks_per_kind_windows():
+    """The engine's overlap window EMA keeps separate prefill and decode
+    estimates (prefill-bearing iterations must not drive the decode
+    chunk budget)."""
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models.transformer import init_model
+    from repro.serve import ContinuousConfig, ContinuousEngine, ServeRequest
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_slots=2, prefill_len=16, block_size=8, max_len=32,
+        strategy="dist_only"))
+    eng.warmup()
+    eng.run_trace([ServeRequest(rid=i, tokens=np.arange(6, dtype=np.int32),
+                                max_new_tokens=4) for i in range(3)])
+    kinds = eng._serve_ema.kinds()
+    assert "prefill" in kinds and "decode" in kinds
+    assert kinds["prefill"] > 0 and kinds["decode"] > 0
+
+
 def test_split_and_gate_charge_only_exposed_stall():
     hidden, exposed = split_hidden_exposed(1.0, 0.3)
     assert hidden == pytest.approx(0.3) and exposed == pytest.approx(0.7)
