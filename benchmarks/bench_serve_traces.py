@@ -35,6 +35,21 @@ ContinuousEngine on a real EP mesh in store mode with overlapped
 migration, and reports a step-time SLO column: ``meshed_step_p50_ms``
 against ``meshed_slo_ms``, plus the backend-compile count after warmup.
 ``check_regression`` gates both (no recompiles, SLO met).
+
+A third, DECODE-HEAVY section replays the ``decode_heavy`` workload
+(sparse arrivals, short prompts, long outputs -> a long steady decode
+tail after warm prefill) through fused- and gather-``paged_attn_impl``
+engines on identical state, and reports the decode fast path columns:
+``decode_toks_per_s`` (wall-clock decode throughput, fused leg, gated
+with a lower reference band), ``fused_vs_gather_speedup`` (the
+attention-compute roofline: allocated table blocks the gather oracle
+attends over / live blocks the fused kernel computes, measured from
+real engine block-table state — structurally >= 1.0, asserted here and
+gated by ``check_regression``), ``attn_phase_decode_us`` (decode-shaped
+attn kernel phase, upper-banded), and trend-only interpret-mode walls
+(``attn_fused_us``/``attn_gather_us``, ``decode_ab_ratio``) — raw
+interpret-mode kernel timings are not meaningful perf references on
+CPU, the roofline ratio is the portable signal.
 """
 
 from __future__ import annotations
@@ -210,6 +225,55 @@ def _run_resched_ab(attempts: int = 2) -> dict:
     raise RuntimeError(f"resched A/B subprocess failed:\n{last}")
 
 
+def _run_decode_heavy(cfg, params, smoke: bool) -> dict:
+    """Fused-vs-gather paged-attention A/B on the decode_heavy workload:
+    both engines replay the SAME trace, differing only in
+    ``paged_attn_impl``. Emits the fused leg's wall-clock decode
+    throughput and roofline ratio, the legs' throughput ratio, and an
+    interleaved best-of kernel-level impl timing at the deployment's
+    pool shapes."""
+    import dataclasses
+
+    from repro.moe.profile import attn_impl_times
+    from repro.serve import ContinuousConfig, ContinuousEngine
+    from repro.sweep.workloads import build_workload
+    from repro.workloads import to_serve_requests
+
+    horizon = 16.0 if smoke else 40.0
+    trace = build_workload("decode_heavy", cfg.vocab_size,
+                           horizon=horizon, rate=1.5, seed=0)
+    ccfg = ContinuousConfig(max_slots=8, prefill_len=32, block_size=16,
+                            max_len=96, strategy="none", metrics_window=8)
+    legs = {}
+    for impl in ("fused", "gather"):
+        eng = ContinuousEngine(
+            dataclasses.replace(cfg, paged_attn_impl=impl), params, ccfg)
+        eng.warmup()
+        eng.run_trace(to_serve_requests(trace), time_scale=20.0)
+        eng.assert_no_recompiles()
+        legs[impl] = eng.metrics.summary()
+    ab = attn_impl_times(
+        batch=ccfg.max_slots, num_kv=cfg.num_kv_heads,
+        gqa=max(cfg.num_heads // cfg.num_kv_heads, 1),
+        head_dim=cfg.head_dim, block_size=ccfg.block_size,
+        max_blocks=ccfg.max_len // ccfg.block_size,
+        window=cfg.sliding_window, iters=2 if smoke else 5)
+    fused, gather = legs["fused"], legs["gather"]
+    return {
+        "decode_toks_per_s": fused.get("decode_toks_per_s", 0.0),
+        "fused_vs_gather_speedup":
+            fused.get("fused_vs_gather_speedup", 0.0),
+        "decode_ab_ratio": (fused.get("decode_toks_per_s", 0.0)
+                            / max(gather.get("decode_toks_per_s", 0.0),
+                                  1e-9)),
+        "attn_fused_us": ab["fused"] * 1e6,
+        "attn_gather_us": ab["gather"] * 1e6,
+        "decode_completed": fused["completed"],
+        "decode_completed_gather": gather["completed"],
+        "decode_trace_requests": float(len(trace)),
+    }
+
+
 def _run_meshed(trace_out: str) -> dict:
     import repro
     src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
@@ -322,6 +386,7 @@ def run(verbose: bool = True, smoke: bool = None):
             meshed_doc = json.load(f)
     resched_ab = _run_resched_ab()
     dup_leg, res_leg = resched_ab["duplicate"], resched_ab["reschedule"]
+    decode_ab = _run_decode_heavy(cfg, params, smoke)
 
     merged = merge_traces([tracer.to_chrome(), meshed_doc],
                           names=["repro-serve-local", "repro-serve-meshed"])
@@ -339,7 +404,7 @@ def run(verbose: bool = True, smoke: bool = None):
     # schema + span-presence validation of the artifact CI uploads
     errors = validate_chrome_trace(merged)
     names = span_names(merged)
-    required = {"route", "pack", "a2a", "ffn", "combine",
+    required = {"attn", "route", "pack", "a2a", "ffn", "combine",
                 "step", "plan.switch", "gps.decision"}
     if meshed["migration_commits"] > 0:
         required |= {"migration.tick", "migration.commit"}
@@ -369,6 +434,11 @@ def run(verbose: bool = True, smoke: bool = None):
              resched_step_p50_ms=res_leg["step_p50_ms"],
              resched_recompiled=float(res_leg["recompiled"]
                                       or dup_leg["recompiled"]),
+             # decode fast path (decode_heavy fused/gather A/B legs);
+             # attn_phase_decode_us is the decode-shaped attn kernel
+             # phase from the dispatch re-profile above
+             **decode_ab,
+             attn_phase_decode_us=dec_phases.get("attn", 0.0) * 1e6,
              **{k: float(v) for k, v in audit.summary().items()},
              **{k: float(v) for k, v in eng.accuracy.summary().items()})
 
@@ -427,6 +497,16 @@ def run(verbose: bool = True, smoke: bool = None):
               f"plans={res_leg['resched_plans']:.0f}, "
               f"p50 {dup_leg['step_p50_ms']:.0f}ms -> "
               f"{res_leg['step_p50_ms']:.0f}ms)")
+        print(f"decode fast path (decode_heavy A/B): "
+              f"{decode_ab['decode_toks_per_s']:.0f} decode tok/s, "
+              f"roofline fused_vs_gather="
+              f"{decode_ab['fused_vs_gather_speedup']:.2f}x "
+              f"(alloc/live blocks), "
+              f"attn phase decode={s['attn_phase_decode_us']:.0f}us | "
+              f"interpret-mode walls (trend only): "
+              f"fused={decode_ab['attn_fused_us']:.0f}us "
+              f"gather={decode_ab['attn_gather_us']:.0f}us "
+              f"ab_ratio={decode_ab['decode_ab_ratio']:.2f}")
         print(f"trace artifact: {trace_path} "
               f"({int(s['trace_events'])} events, "
               f"{'valid' if trace_ok else 'INVALID: ' + '; '.join(errors[:3] + missing)}) | "
@@ -441,6 +521,11 @@ def run(verbose: bool = True, smoke: bool = None):
                 print(f"  {k:8s} {phases[k]*1e6:9.0f}us "
                       f"({100.0 * phases[k] / total:4.1f}%)  "
                       f"decode {dec_phases[k]*1e6:9.0f}us")
+            if "attn" in phases:
+                print(f"  {'attn':8s} {phases['attn']*1e6:9.0f}us "
+                      f"(paged decode kernel, impl="
+                      f"{getattr(cfg, 'paged_attn_impl', 'fused')})  "
+                      f"decode {dec_phases['attn']*1e6:9.0f}us")
             if "migrate" in phases:
                 print(f"  {'migrate':8s} {phases['migrate']*1e6:9.0f}us "
                       "(per plan-switch chunk, not per step)")
@@ -471,6 +556,19 @@ def run(verbose: bool = True, smoke: bool = None):
         f"{res_leg['overflow_tokens']:.0f} overflow tokens")
     assert s["resched_recompiled"] == 0.0, \
         "lever A/B legs recompiled after warmup"
+    # decode fast path acceptance: both A/B legs must finish the whole
+    # decode-heavy trace, the fused leg must show real decode throughput,
+    # and the roofline ratio is structurally >= 1.0 (the gather view can
+    # never cover fewer blocks than are live)
+    assert decode_ab["decode_completed"] \
+        == decode_ab["decode_trace_requests"] \
+        == decode_ab["decode_completed_gather"], decode_ab
+    assert decode_ab["decode_toks_per_s"] > 0, \
+        "decode_heavy trace produced no pure-decode iterations"
+    assert decode_ab["fused_vs_gather_speedup"] >= 1.0, (
+        f"attention roofline ratio "
+        f"{decode_ab['fused_vs_gather_speedup']:.3f} < 1.0 — live-block "
+        f"accounting is broken")
 
     derived = (f"completed={n_completed}/{len(trace)} "
                f"switches={n_switches} "
@@ -479,7 +577,9 @@ def run(verbose: bool = True, smoke: bool = None):
                f"ttft_p99={s['ttft_p99']*1e3:.0f}ms "
                f"tpot_p99={s['tpot_p99']*1e3:.0f}ms "
                f"meshed_p50={s['meshed_step_p50_ms']:.0f}ms "
-               f"resched_absorbed={s['overflow_absorbed_frac']:.2f}")
+               f"resched_absorbed={s['overflow_absorbed_frac']:.2f} "
+               f"decode_tok_s={s['decode_toks_per_s']:.0f} "
+               f"attn_roofline={s['fused_vs_gather_speedup']:.2f}x")
     return s, derived
 
 

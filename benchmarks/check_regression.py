@@ -21,10 +21,13 @@ the committed baseline and FAILS (exit 1) when:
   * overlapped migration hides less than half the plan-switch stall, or
     its final store diverges from the synchronous path (bit-exactness),
   * the meshed continuous-serving smoke recompiled after warmup or missed
-    its step-time SLO, or
+    its step-time SLO,
   * the serving trace artifact failed schema validation / lost required
     spans (``trace_ok``), or the disabled tracer's estimated per-step
-    cost reached 1% of a meshed serving step.
+    cost reached 1% of a meshed serving step, or
+  * the serving bench's fused-vs-gather paged-attention roofline ratio
+    fell below 1.0 (allocated / live KV blocks — the fused kernel must
+    never compute more blocks than the gather view materializes).
 
 Escape hatch: set ``REPRO_BENCH_REFRESH_BASELINE=1`` to overwrite the
 baseline with the current measurement instead of gating (use when a
@@ -111,6 +114,12 @@ def compare(current: dict, baseline: dict, tol: float = 0.0) -> list:
         failures.append(
             f"disabled tracer costs {100 * off_frac:.1f}% of a meshed "
             f"serving step (budget 1%)")
+    attn_speedup = serve.get("fused_vs_gather_speedup")
+    if attn_speedup is not None and attn_speedup < 1.0:
+        failures.append(
+            f"fused paged-attention roofline below the gather oracle: "
+            f"fused_vs_gather_speedup={attn_speedup:.2f}x (the fused "
+            f"kernel can never cover MORE blocks than the gather view)")
     return failures
 
 

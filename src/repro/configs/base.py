@@ -97,6 +97,13 @@ class ModelConfig:
     qkv_bias: bool = False
     sliding_window: int = 0              # 0 = full attention
     rope_theta: float = 10000.0
+    # Paged decode attention ------------------------------------------------
+    # "fused": single Pallas pass walks block_tables and computes GQA
+    # attention with an online-softmax accumulator straight from the shared
+    # KV pool (interpret=True on CPU/test meshes); "gather": materialize
+    # the (B, M*bs, K, hd) logical view first (bit-exact oracle — same
+    # blockwise op sequence, so fp32 matches the kernel exactly).
+    paged_attn_impl: str = "fused"
     # norms / activations ----------------------------------------------------
     norm: str = "rmsnorm"                # rmsnorm | nonparametric (olmo)
     activation: str = "swiglu"           # swiglu | gelu | relu | relu2 (rwkv)

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels import histogram as _hist
 from repro.kernels import moe_gemm as _mg
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rg_lru as _rg
 from repro.kernels import topk_router as _tk
 
@@ -52,3 +53,13 @@ def fused_topk_route(logits, top_k: int):
 def rg_lru_scan(a, b, h0):
     """Linear recurrence h_t = a_t h_{t-1} + b_t (RG-LRU inner scan)."""
     return _rg.rg_lru_scan(a, b, h0, interpret=_interpret())
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           window: int = 0):
+    """Fused paged GQA decode over the shared KV block pool — gather +
+    online-softmax in one pass, no (B, M*bs, K, hd) intermediate (see
+    `repro.kernels.paged_attention`). q: (B, K, G, hd)."""
+    return _pa.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                      lengths, window=window,
+                                      interpret=_interpret())

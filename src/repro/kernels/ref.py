@@ -26,6 +26,70 @@ def histogram_ref(idx, num_classes: int):
         jnp.ones_like(idx))
 
 
+def paged_decode_ref(q, k_view, v_view, lengths, *, window: int = 0,
+                     block_size: int = 16):
+    """Gather-path paged-decode oracle for ``kernels.paged_attention``.
+
+    Runs over the MATERIALISED logical view (its defining cost) but with
+    the kernel's exact blockwise online-softmax op sequence — same dots,
+    same exp/rescale order, same block-skip — so fused vs gather is
+    bit-exact in fp32, not merely allclose.
+
+    q: (B, K, G, hd); k_view/v_view: (B, M*bs, K, hd) gathered views;
+    lengths: (B,) int32 (new token already written at ``lengths[b]``).
+    Returns (B, K, G, hd) in q's dtype.
+    """
+    B, K, G, hd = q.shape
+    bs = block_size
+    M = k_view.shape[1] // bs
+    scale = 1.0 / (hd ** 0.5)
+    neg_inf = -1e30
+    cl = jnp.asarray(lengths, jnp.int32) + 1                      # (B,)
+    qf = q.astype(jnp.float32)
+
+    def slot_scores(qb, kb):
+        # (K, G, hd) x (bs, K, hd) -> (K, G, bs): batch K, contract hd
+        return jax.lax.dot_general(qb, kb, (((2,), (2,)), ((0,), (1,))),
+                                   preferred_element_type=jnp.float32)
+
+    def slot_out(pb, vb):
+        # (K, G, bs) x (bs, K, hd) -> (K, G, hd): batch K, contract bs
+        return jax.lax.dot_general(pb, vb, (((2,), (0,)), ((0,), (1,))),
+                                   preferred_element_type=jnp.float32)
+
+    def block_step(carry, inputs):
+        m_run, l_run, acc = carry
+        mi, k_blk, v_blk = inputs                # (B, bs, K, hd)
+        start = mi * bs
+        pos = start + jnp.arange(bs, dtype=jnp.int32)
+        mask = pos[None, :] < cl[:, None]                         # (B, bs)
+        live = start < cl                                         # (B,)
+        if window > 0:
+            mask &= pos[None, :] >= (cl - window)[:, None]
+            live &= start + bs > cl - window
+        s = jax.vmap(slot_scores)(qf, k_blk.astype(jnp.float32)) * scale
+        s = jnp.where(mask[:, None, None, :], s, neg_inf)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=-1)
+        a_new = acc * corr[..., None] + jax.vmap(slot_out)(
+            p, v_blk.astype(jnp.float32))
+        keep = live[:, None, None]
+        return (jnp.where(keep, m_new, m_run),
+                jnp.where(keep, l_new, l_run),
+                jnp.where(keep[..., None], a_new, acc)), None
+
+    m0 = jnp.full((B, K, G), neg_inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G), jnp.float32)
+    a0 = jnp.zeros((B, K, G, hd), jnp.float32)
+    kb = jnp.moveaxis(k_view.reshape(B, M, bs, K, hd), 1, 0)
+    vb = jnp.moveaxis(v_view.reshape(B, M, bs, K, hd), 1, 0)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        block_step, (m0, l0, a0), (jnp.arange(M, dtype=jnp.int32), kb, vb))
+    return (acc / jnp.maximum(l_f, 1e-20)[..., None]).astype(q.dtype)
+
+
 def rg_lru_ref(a, b, h0):
     """Sequential linear recurrence h_t = a_t h_{t-1} + b_t.
     a, b: (B, S, D) f32; h0: (B, D) f32. Returns (h_all (B,S,D), h_last)."""

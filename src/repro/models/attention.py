@@ -124,9 +124,12 @@ def decode_attention(q, k_cache, v_cache, *, cache_len, window=0):
     if window > 0:
         mask = mask & (pos[None, :] >= cl - window)
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v_cache.dtype)
-    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache)
-    return out.reshape(B, 1, H, hd)
+    # keep the probs in f32 for the PV product (matches the paged fused
+    # kernel's f32 accumulator, so linear and paged decode agree to
+    # summation-order noise instead of bf16-cast noise)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype).reshape(B, 1, H, hd)
 
 
 # ---------------------------------------------------------------------------
@@ -231,27 +234,52 @@ def gqa_decode_paged(params, cfg: ModelConfig, x, pool, block_tables, lengths,
     slot's allocation point at the reserved null block 0 and are masked by
     ``lengths``). lengths: (B,) — the new token is written at logical
     position ``lengths[b]``, whose physical block MUST already be allocated
-    (the scheduler grows tables before calling). ``window``: architectural
-    sliding window, applied as a mask (blocks stay allocated — the pool is
-    linear in logical positions; correctness first, reclaim later).
+    (the scheduler grows tables before calling); ``lengths[b] == 0`` marks
+    a released/idle slot whose KV write is suppressed so dead slots never
+    dirty the null block. ``window``: architectural sliding window, applied
+    as a mask (blocks stay allocated — the pool is linear in logical
+    positions; correctness first, reclaim later).
+
+    ``cfg.paged_attn_impl`` selects the attention path: "fused" runs the
+    Pallas kernel straight off the pool (no gathered intermediate);
+    "gather" materializes the logical view and runs the identical blockwise
+    online-softmax in pure jnp (fp32 bit-exact oracle).
     """
+    from repro.kernels import ops as _kernel_ops
+    from repro.kernels import ref as _kernel_ref
+
     B = x.shape[0]
     N, bs, K, hd = pool["k"].shape
-    positions = jnp.asarray(lengths, jnp.int32)[:, None]          # (B, 1)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions = lengths[:, None]                                  # (B, 1)
     q, k, v = gqa_project(params, cfg, x, positions)
     b_idx = jnp.arange(B)
     blk = block_tables[b_idx, positions[:, 0] // bs]              # (B,)
     off = positions[:, 0] % bs                                    # (B,)
-    pool = dict(pool)
     # slots own disjoint blocks, so cross-slot collisions only happen on the
-    # null block (garbage, never read with a valid mask)
-    pool["k"] = pool["k"].at[blk, off].set(k[:, 0].astype(pool["k"].dtype))
-    pool["v"] = pool["v"].at[blk, off].set(v[:, 0].astype(pool["v"].dtype))
-    # gather each slot's logical view: (B, M, bs, K, hd) -> (B, M*bs, K, hd)
-    k_view = pool["k"][block_tables].reshape(B, -1, K, hd)
-    v_view = pool["v"][block_tables].reshape(B, -1, K, hd)
-    out = decode_attention(q, k_view, v_view, cache_len=lengths + 1,
-                           window=window)
+    # null block; inactive slots (lengths == 0 after release) keep the old
+    # value — their table rows all point at the null block, which must stay
+    # clean for every other slot's masked reads
+    active = (lengths > 0)[:, None, None]                         # (B, 1, 1)
+    k_pool = pool["k"].at[blk, off].set(
+        jnp.where(active, k[:, 0].astype(pool["k"].dtype),
+                  pool["k"][blk, off]))
+    v_pool = pool["v"].at[blk, off].set(
+        jnp.where(active, v[:, 0].astype(pool["v"].dtype),
+                  pool["v"][blk, off]))
+    G = q.shape[2] // K
+    qg = q.reshape(B, K, G, hd)
+    impl = getattr(cfg, "paged_attn_impl", "fused")
+    if impl == "fused":
+        out = _kernel_ops.paged_decode_attention(
+            qg, k_pool, v_pool, block_tables, lengths, window=window)
+    else:
+        # gather each slot's view: (B, M, bs, K, hd) -> (B, M*bs, K, hd)
+        k_view = k_pool[block_tables].reshape(B, -1, K, hd)
+        v_view = v_pool[block_tables].reshape(B, -1, K, hd)
+        out = _kernel_ref.paged_decode_ref(qg, k_view, v_view, lengths,
+                                           window=window, block_size=bs)
+    pool = {**pool, "k": k_pool, "v": v_pool}
     return dense(params["wo"], out.reshape(B, 1, -1)), pool
 
 

@@ -410,7 +410,9 @@ def _attn_layer(layer_p, cfg, x, positions, rt, *, cache=None, cache_len=None,
         if block_tables is not None:
             # continuous batching keeps caches linear (window_override =
             # max_len for sizing) but must still MASK to the architectural
-            # sliding window, or paged decode diverges from windowed serving
+            # sliding window, or paged decode diverges from windowed
+            # serving. cfg.paged_attn_impl selects the fused Pallas
+            # one-pass kernel or the materialize-then-attend gather oracle
             a, sub = attn.gqa_decode_paged(layer_p["attn"], cfg, h, sub,
                                            block_tables, cache_len,
                                            window=cfg.sliding_window)

@@ -41,6 +41,11 @@ MIGRATE_PHASE = "migrate"
 # is what lands on the serving critical path; the execution rides under
 # forward compute, so ``migrate`` must not be lumped into step time.
 PREFETCH_PHASE = "prefetch"
+# Paged-decode attention (not a dispatch phase — kept out of PHASES so
+# ``dispatch_phase_times``' total stays a sum of dispatch work only). Timed
+# per decode step at serving shapes so the fused-kernel win is visible next
+# to the MoE breakdown it competes with on the step wall.
+ATTN_PHASE = "attn"
 
 
 def _time(fn, *args, iters: int) -> float:
@@ -194,6 +199,99 @@ def migrate_phase_time(*, d_model: int = 256, d_ff: int = 256,
         best_issue = min(best_issue, time.perf_counter() - t0)
         jax.block_until_ready(out)       # drain before the next round
     return {MIGRATE_PHASE: t, PREFETCH_PHASE: best_issue}
+
+
+def _paged_attn_inputs(*, batch: int, num_kv: int, gqa: int, head_dim: int,
+                       block_size: int, max_blocks: int, valid_frac: float,
+                       dtype, seed: int):
+    """Representative paged-decode state: every slot allocates the full
+    ``max_blocks`` table row but only ``valid_frac`` of it holds live
+    tokens — the regime where the gather path's HBM traffic is fixed at
+    the allocated view while the fused kernel walks only valid blocks."""
+    rng = np.random.default_rng(seed)
+    B, bs, K, hd, M = batch, block_size, num_kv, head_dim, max_blocks
+    N = 1 + B * M                                    # block 0 = null
+    q = jnp.asarray(rng.normal(size=(B, K, gqa, hd)), dtype)
+    k_pool = jnp.asarray(rng.normal(size=(N, bs, K, hd)), dtype)
+    v_pool = jnp.asarray(rng.normal(size=(N, bs, K, hd)), dtype)
+    tables = jnp.asarray(
+        1 + np.arange(B * M, dtype=np.int32).reshape(B, M))
+    valid = max(1, int(M * bs * valid_frac))
+    lengths = jnp.asarray(
+        rng.integers(max(1, valid // 2), valid, size=B), jnp.int32)
+    return q, k_pool, v_pool, tables, lengths
+
+
+def attn_phase_times(*, batch: int = 8, num_kv: int = 8, gqa: int = 4,
+                     head_dim: int = 128, block_size: int = 16,
+                     max_blocks: int = 32, valid_frac: float = 0.25,
+                     window: int = 0, impl: str = "fused",
+                     dtype=jnp.bfloat16, iters: int = 5,
+                     seed: int = 0) -> Dict[str, float]:
+    """Time one paged-decode attention step at serving shapes. Returns
+    ``{"attn": seconds}`` for the selected ``paged_attn_impl`` so engines
+    can record it alongside the dispatch phase breakdown."""
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels import ref as kernel_ref
+
+    q, k_pool, v_pool, tables, lengths = _paged_attn_inputs(
+        batch=batch, num_kv=num_kv, gqa=gqa, head_dim=head_dim,
+        block_size=block_size, max_blocks=max_blocks,
+        valid_frac=valid_frac, dtype=dtype, seed=seed)
+    B, K, _, hd = q.shape
+    if impl == "fused":
+        fn = jax.jit(lambda q_, k_, v_: kernel_ops.paged_decode_attention(
+            q_, k_, v_, tables, lengths, window=window))
+    else:
+        def gather(q_, k_, v_):
+            k_view = k_[tables].reshape(B, -1, K, hd)
+            v_view = v_[tables].reshape(B, -1, K, hd)
+            return kernel_ref.paged_decode_ref(
+                q_, k_view, v_view, lengths, window=window,
+                block_size=block_size)
+        fn = jax.jit(gather)
+    return {ATTN_PHASE: _time(fn, q, k_pool, v_pool, iters=iters)}
+
+
+def attn_impl_times(*, batch: int = 8, num_kv: int = 8, gqa: int = 4,
+                    head_dim: int = 128, block_size: int = 16,
+                    max_blocks: int = 32, valid_frac: float = 0.25,
+                    window: int = 0, dtype=jnp.bfloat16, iters: int = 5,
+                    seed: int = 0) -> Dict[str, float]:
+    """Head-to-head paged-decode attention timing: the fused Pallas kernel
+    vs the materialize-then-attend gather oracle on identical pool state,
+    measured INTERLEAVED round by round (same protocol as
+    ``pack_impl_times``). Returns {"fused": s, "gather": s} best-of."""
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels import ref as kernel_ref
+
+    q, k_pool, v_pool, tables, lengths = _paged_attn_inputs(
+        batch=batch, num_kv=num_kv, gqa=gqa, head_dim=head_dim,
+        block_size=block_size, max_blocks=max_blocks,
+        valid_frac=valid_frac, dtype=dtype, seed=seed)
+    B, K, _, hd = q.shape
+
+    def gather(q_, k_, v_):
+        k_view = k_[tables].reshape(B, -1, K, hd)
+        v_view = v_[tables].reshape(B, -1, K, hd)
+        return kernel_ref.paged_decode_ref(
+            q_, k_view, v_view, lengths, window=window,
+            block_size=block_size)
+
+    fns = {
+        "fused": jax.jit(lambda q_, k_, v_: kernel_ops.paged_decode_attention(
+            q_, k_, v_, tables, lengths, window=window)),
+        "gather": jax.jit(gather),
+    }
+    for fn in fns.values():
+        jax.block_until_ready(fn(q, k_pool, v_pool))     # compile + warm
+    best = {impl: math.inf for impl in fns}
+    for _ in range(max(iters, 1)):
+        for impl, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q, k_pool, v_pool))
+            best[impl] = min(best[impl], time.perf_counter() - t0)
+    return best
 
 
 def pack_impl_times(*, d_model: int = 256, num_experts: int = 64,

@@ -1253,45 +1253,70 @@ class ContinuousEngine(_OverlapStoreMixin):
 
     def profile_phases(self, iters: int = 3, impl: Optional[str] = None,
                        tokens: Optional[int] = None) -> Dict[str, float]:
-        """Measure the dispatch phase breakdown (route/pack/a2a/ffn/combine,
-        plus the ``migrate`` chunk-fill cost when duplication is on).
-        ``tokens`` picks the shape (default: this deployment's prefill
-        bucket; pass ``max_slots`` for a decode-shaped profile). The
-        breakdown is recorded into ``metrics`` only when it profiles the
-        ACTIVE ``dispatch_impl`` and the phase columns are empty — what-if
-        runs with an ``impl`` override just return their numbers, and a
-        second shape must ``metrics.reset_phases()`` first, so repeated
-        calls can't silently double-accumulate the reported columns.
-        Every profile also lands as a sequence of retrospective spans on
-        the tracer's "dispatch-profile" track. Returns seconds per phase;
-        ``migrate`` is NOT part of ``total`` (it is paid per plan switch,
-        not per step)."""
-        if not self.cfg.is_moe:
-            return {}
-        from repro.moe.profile import dispatch_phase_times, migrate_phase_time
+        """Measure the per-step phase breakdown: the paged decode
+        ``attn`` kernel at this deployment's pool/table shapes (any GQA
+        model, MoE or not), plus — for MoE configs — the dispatch phases
+        (route/pack/a2a/ffn/combine) and the ``migrate`` chunk-fill cost
+        when duplication is on. ``tokens`` picks the dispatch shape
+        (default: this deployment's prefill bucket; pass ``max_slots``
+        for a decode-shaped profile). The breakdown is recorded into
+        ``metrics`` only when it profiles the ACTIVE ``dispatch_impl``
+        and the phase columns are empty — what-if runs with an ``impl``
+        override just return their numbers, and a second shape must
+        ``metrics.reset_phases()`` first, so repeated calls can't
+        silently double-accumulate the reported columns. Every profile
+        also lands as a sequence of retrospective spans on the tracer's
+        "dispatch-profile" track. Returns seconds per phase; ``migrate``
+        is NOT part of ``total`` (it is paid per plan switch, not per
+        step)."""
+        from repro.moe.profile import (ATTN_PHASE, attn_phase_times,
+                                       dispatch_phase_times,
+                                       migrate_phase_time)
         m = self.moe_cfg
         tokens = tokens or self.ccfg.prefill_len
-        phases = dispatch_phase_times(
-            d_model=self.cfg.d_model, d_ff=m.d_ff_expert,
-            num_experts=m.num_experts, top_k=m.top_k,
-            tokens=tokens, ranks=self.ep_ranks,
-            capacity_factor=m.capacity_factor,
-            impl=impl or m.dispatch_impl, activation=self.cfg.activation,
-            iters=iters)
-        if m.duplication_slots > 0:
-            phases.update(migrate_phase_time(
+        phases: Dict[str, float] = {}
+        if self.cfg.attention in ("gqa", "mixed") \
+                and self.cfg.num_kv_heads > 0:
+            phases.update(attn_phase_times(
+                batch=self.ccfg.max_slots,
+                num_kv=self.cfg.num_kv_heads,
+                gqa=max(self.cfg.num_heads // self.cfg.num_kv_heads, 1),
+                head_dim=self.cfg.head_dim,
+                block_size=self.ccfg.block_size,
+                max_blocks=max(self.ccfg.max_len // self.ccfg.block_size, 1),
+                window=self.cfg.sliding_window,
+                impl=getattr(self.cfg, "paged_attn_impl", "fused"),
+                iters=iters))
+        if m is not None:
+            phases.update(dispatch_phase_times(
                 d_model=self.cfg.d_model, d_ff=m.d_ff_expert,
-                num_experts=m.num_experts, ranks=self.ep_ranks,
-                dup_slots=m.duplication_slots, layers=self.cfg.num_layers,
-                chunk=self.ccfg.migrate_chunk, iters=iters))
+                num_experts=m.num_experts, top_k=m.top_k,
+                tokens=tokens, ranks=self.ep_ranks,
+                capacity_factor=m.capacity_factor,
+                impl=impl or m.dispatch_impl,
+                activation=self.cfg.activation, iters=iters))
+            if m.duplication_slots > 0:
+                phases.update(migrate_phase_time(
+                    d_model=self.cfg.d_model, d_ff=m.d_ff_expert,
+                    num_experts=m.num_experts, ranks=self.ep_ranks,
+                    dup_slots=m.duplication_slots,
+                    layers=self.cfg.num_layers,
+                    chunk=self.ccfg.migrate_chunk, iters=iters))
+        if not phases:
+            return {}
         ts = None
-        for k in ("route", "pack", "a2a", "ffn", "combine", "migrate"):
+        for k in (ATTN_PHASE, "route", "pack", "a2a", "ffn", "combine",
+                  "migrate"):
             if k in phases:
                 ts = self.tracer.add_span(
                     k, phases[k], ts_ns=ts, cat="dispatch",
                     track="dispatch-profile",
-                    args={"impl": impl or m.dispatch_impl, "tokens": tokens})
-        if (impl is None or impl == m.dispatch_impl) \
+                    args={"impl": impl or (m.dispatch_impl if m else
+                                           getattr(self.cfg,
+                                                   "paged_attn_impl",
+                                                   "fused")),
+                          "tokens": tokens})
+        if (impl is None or (m is not None and impl == m.dispatch_impl)) \
                 and not self.metrics.phase_times:
             self.metrics.record_phases(phases)
         return phases
@@ -1391,7 +1416,24 @@ class ContinuousEngine(_OverlapStoreMixin):
         events.preempted = splan.preempted
         decode_slots = [s for s in splan.decode_slots
                         if sched.slots[s] is not None]
+        attn_live = attn_alloc = 0.0
         if decode_slots:
+            # attention-compute roofline for this decode iteration, from
+            # the PRE-increment lengths the kernel actually sees: the
+            # gather oracle materializes and attends over every allocated
+            # table column (max_slots x tbl_m blocks) while the fused
+            # kernel's @pl.when(live) guard only computes blocks holding
+            # in-context (and, under a sliding window, in-window) tokens.
+            # alloc/live is the fused kernel's structural speedup bound.
+            bs = ccfg.block_size
+            tbl_m = sched.tables.tables.shape[1]
+            cl = sched.tables.lengths.astype(np.int64) + 1
+            starts = np.arange(tbl_m, dtype=np.int64)[None, :] * bs
+            live = starts < cl[:, None]
+            if self.cfg.sliding_window > 0:
+                live &= starts + bs > cl[:, None] - self.cfg.sliding_window
+            attn_live = float(live.sum())
+            attn_alloc = float(ccfg.max_slots * tbl_m)
             active = np.zeros((ccfg.max_slots, 1), np.float32)
             active[decode_slots] = 1.0
             with self.tracer.span("decode",
@@ -1488,6 +1530,7 @@ class ContinuousEngine(_OverlapStoreMixin):
         dt = clock() - now
         self._recent_step_s = (dt if self._recent_step_s <= 0
                                else 0.9 * self._recent_step_s + 0.1 * dt)
+        wall = _time.perf_counter() - t_wall0
         if self._step_migration_bytes == 0:
             # migration-free steps calibrate the overlap window (the
             # compute time a staged fill can hide under). Measured on the
@@ -1495,8 +1538,9 @@ class ContinuousEngine(_OverlapStoreMixin):
             # physical property of the forward pass, and frozen-clock
             # drivers (tests, fixed-rate replay) would otherwise report 0.
             # Keyed by iteration kind: a decode-only step must not inherit
-            # a prefill-sized window (and vice versa).
-            wall = _time.perf_counter() - t_wall0
+            # a prefill-sized window (and vice versa) — with the fused
+            # decode kernel the decode step wall is materially smaller, so
+            # the KindWindowEMA decode windows shrink to match.
             self._serve_ema.update(self._step_kind, wall)
         self.metrics.record_iteration(
             now, dt, prefill_tokens=prefill_tokens,
@@ -1504,7 +1548,8 @@ class ContinuousEngine(_OverlapStoreMixin):
             counts=iter_counts, plan=self._plan_stack,
             ep_ranks=self.ep_ranks,
             dup_slots=self.moe_cfg.duplication_slots if self.moe_cfg else 0,
-            strategy=self.strategy)
+            strategy=self.strategy, wall_s=wall,
+            attn_live_blocks=attn_live, attn_alloc_blocks=attn_alloc)
         step_span.set_args(prefills=len(splan.prefills),
                            decoded=len(decode_slots))
         step_span.__exit__()

@@ -159,6 +159,17 @@ class ServeMetrics:
             "overflow_tokens": 0.0, "dropped_tokens": 0.0,
             "resched_a2a_bytes": 0.0, "plans": 0.0,
             "absorbed_pred_sum": 0.0, "residual_sum": 0.0}
+        # decode fast-path accounting: wall seconds and emitted tokens of
+        # pure-decode iterations (prefill_tokens == 0) feed the
+        # decode_toks_per_s summary column; live/alloc block counts from
+        # the paged-attention block tables feed the fused-vs-gather
+        # attention-compute roofline (the gather oracle materializes and
+        # attends over every allocated table column, the fused kernel only
+        # touches live blocks)
+        self._decode_wall_s: float = 0.0
+        self._decode_tokens_n: float = 0.0
+        self._attn_live_blocks: float = 0.0
+        self._attn_alloc_blocks: float = 0.0
         self._win_counts: Optional[np.ndarray] = None
         self._win: Optional[WindowRecord] = None
         self._t0: Optional[float] = None
@@ -168,10 +179,18 @@ class ServeMetrics:
     def record_iteration(self, now: float, dt: float, *, prefill_tokens: int,
                          decode_tokens: int, counts: Optional[np.ndarray],
                          plan: Optional[PlacementPlan], ep_ranks: int,
-                         dup_slots: int, strategy: str = ""):
+                         dup_slots: int, strategy: str = "",
+                         wall_s: float = 0.0,
+                         attn_live_blocks: float = 0.0,
+                         attn_alloc_blocks: float = 0.0):
         if self._t0 is None:
             self._t0 = now
         self._t_last = now + dt
+        if prefill_tokens == 0 and decode_tokens > 0:
+            self._decode_wall_s += float(wall_s)
+            self._decode_tokens_n += float(decode_tokens)
+            self._attn_live_blocks += float(attn_live_blocks)
+            self._attn_alloc_blocks += float(attn_alloc_blocks)
         if self._win is None:
             self._win = WindowRecord(t_start=now, t_end=now + dt,
                                      strategy=strategy)
@@ -352,6 +371,18 @@ class ServeMetrics:
             "goodput_req_s": len(good) / horizon,
             "preemptions": float(sum(t.n_preemptions for t in ts)),
         }
+        # decode fast path: wall-clock decode throughput plus the
+        # attention-compute roofline ratio (allocated table blocks the
+        # gather oracle covers / live blocks the fused kernel computes).
+        # The ratio is structurally >= 1.0 — it is the fused kernel's
+        # block-skip advantage measured from real engine block-table
+        # state, independent of interpret-mode overheads.
+        if self._decode_wall_s > 0:
+            out["decode_toks_per_s"] = \
+                self._decode_tokens_n / self._decode_wall_s
+        if self._attn_alloc_blocks > 0:
+            out["fused_vs_gather_speedup"] = (
+                self._attn_alloc_blocks / max(self._attn_live_blocks, 1.0))
         # publish every summary column through the registry so the same
         # numbers are scrapeable (Prometheus text / JSONL) without a second
         # hand-rolled aggregation path

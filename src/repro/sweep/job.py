@@ -45,6 +45,9 @@ SUMMARY_METRICS = (
     "migration_stall_us", "migration_rejected",
     "dropped_tokens", "overflow_tokens", "overflow_absorbed_frac",
     "resched_a2a_bytes", "resched_plans",
+    # decode fast path: wall-clock decode throughput and the
+    # fused-vs-gather attention-compute roofline (alloc/live KV blocks)
+    "decode_toks_per_s", "fused_vs_gather_speedup",
 )
 
 

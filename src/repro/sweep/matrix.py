@@ -117,15 +117,18 @@ class SweepSpec:
 # files duplicate-vs-reschedule runs as sibling series of one sweep.
 LEVER_STRATEGIES = ("reschedule", "both")
 
-# The CI smoke tier: 2 meshes x 2 workloads (the acceptance floor), one
+# The CI smoke tier: 2 meshes x 3 workloads (the acceptance floor), one
 # EP-only mesh and one data x EP mesh so the topology term in step time
-# is exercised, against a steady and a skew-shifting trace — each point
-# also run with the reschedule / duplicate+reschedule levers so the
-# combined strategy space has trend series from day one.
+# is exercised, against a steady trace, a skew-shifting trace, and the
+# decode-heavy trace (long steady decode tail — the fused paged-
+# attention fast path's regime, feeding the decode_toks_per_s trend
+# series) — each point also run with the reschedule /
+# duplicate+reschedule levers so the combined strategy space has trend
+# series from day one.
 SMOKE_SPEC = SweepSpec(
     archs=("mixtral-8x7b",),
     meshes=(MeshShape(1, 4), MeshShape(2, 4)),
-    workloads=("steady", "skew_shift"),
+    workloads=("steady", "skew_shift", "decode_heavy"),
     strategies=("dist_only",) + LEVER_STRATEGIES,
 )
 
@@ -137,6 +140,7 @@ FULL_SPEC = SweepSpec(
     archs=("mixtral-8x7b",),
     meshes=(MeshShape(1, 4), MeshShape(2, 2), MeshShape(2, 4),
             MeshShape(2, 8)),
-    workloads=("steady", "skew_shift", "diurnal", "multi_tenant"),
+    workloads=("steady", "skew_shift", "diurnal", "multi_tenant",
+               "decode_heavy"),
     strategies=("dist_only", "token_to_expert") + LEVER_STRATEGIES,
 )

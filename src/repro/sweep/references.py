@@ -39,6 +39,15 @@ TOLERANCE_RULES: Tuple[Tuple[str, Tuple[Optional[float],
     (r"resched_a2a_bytes$", (0.9, 3.0)),
     # the reschedule leg must stay dropless (ref 0 -> absolute band)
     (r"resched_dropped_tokens$", (0.0, 0.0)),
+    # decode fast path: wall-clock decode throughput must not collapse
+    # (bounded below like other throughput columns); the decode-shaped
+    # attention phase timing is bounded above like step timings. The
+    # fused-vs-gather roofline ratio is caught by the "speedup" rule
+    # above; raw attn_fused_us/attn_gather_us walls and the interpret-
+    # mode A/B ratio (decode_ab_ratio) deliberately match no rule —
+    # interpret-mode kernel walls are not meaningful perf references.
+    (r"^decode_toks_per_s$", (0.8, None)),
+    (r"^attn_phase_decode_us$", (None, 1.5)),
     # timings: bounded above (CI machines are ~2x noisy, so the band is
     # wide; order-of-magnitude regressions are what it must catch)
     (r"^wall_us$", (None, 1.0)),

@@ -61,11 +61,29 @@ def _multi_tenant(vocab: int, horizon: float, rate: float,
     return make_trace(tenants, horizon, seed=seed)
 
 
+def _decode_heavy(vocab: int, horizon: float, rate: float,
+                  seed: int) -> List[TraceRequest]:
+    """Decode-bound regime: sparse arrivals with short prompts and long
+    generation budgets, so after a brief prefill warmup the engine sits in
+    a steady decode tail — the state the fused paged-attention kernel (and
+    the KindWindowEMA's decode window) is sized for. Output budgets stay
+    within the smoke sweep engine's max_len=48 / max_iters bounds (prompt
+    <= 16 + out <= 24, sparse arrivals so late tails drain in budget)
+    while output tokens still dominate ~2-3x."""
+    flat = Topic("broad", zipf_alpha=0.6, vocab_frac=1.0, seed=1)
+    corpus = ShiftingCorpus(vocab, [flat], schedule=[(0.0, [1.0])])
+    spec = TenantSpec("decode-heavy", corpus, arrivals="poisson",
+                      rate=rate / 3, prompt_len_mean=8.0, prompt_len_max=16,
+                      out_len_mean=12.0, out_len_max=24)
+    return make_trace([spec], horizon, seed=seed)
+
+
 WORKLOADS = {
     "steady": _steady,
     "skew_shift": _skew_shift,
     "diurnal": _diurnal,
     "multi_tenant": _multi_tenant,
+    "decode_heavy": _decode_heavy,
 }
 
 
