@@ -36,6 +36,18 @@ migration, and reports a step-time SLO column: ``meshed_step_p50_ms``
 against ``meshed_slo_ms``, plus the backend-compile count after warmup.
 ``check_regression`` gates both (no recompiles, SLO met).
 
+A FLEET A/B section (subprocess, same fake-device mesh) hosts TWO model
+instances through `repro.fleet.FleetEngine` under the ``fleet_shift``
+traffic-shift trace and compares a static equal HBM split against the
+cross-model arbiter: the static leg must visibly violate the hot (chat)
+tenant's TTFT SLO, the arbiter leg must commit >= 1 quota move and
+recover fleet SLO attainment, and both legs must hold zero post-warmup
+recompiles (every move is a logical quota inside compiled shapes).
+Columns: ``fleet_slo_attainment`` (arbiter leg, lower-banded),
+``fleet_slo_attainment_static`` (trend), ``fleet_arbiter_moves``
+(lower-banded), ``fleet_step_p50_ms`` / ``fleet_recompiled`` (gated like
+the meshed smoke).
+
 A third, DECODE-HEAVY section replays the ``decode_heavy`` workload
 (sparse arrivals, short prompts, long outputs -> a long steady decode
 tail after warm prefill) through fused- and gather-``paged_attn_impl``
@@ -201,6 +213,118 @@ for lever in ("duplicate", "reschedule"):
     }
 print(json.dumps(out))
 """
+
+
+# Fleet A/B under a traffic shift (fleet_shift workload: a chat tenant
+# whose load ramps to 2x while a batch tenant stays flat). Both legs host
+# the SAME two model instances on one 2x4 mesh with identical compiled
+# shapes and a static equal KV split (12 of 24 pool blocks each, 1 of 2
+# dup slots each); the arbiter leg may move quota between them, the
+# static leg may not. The static split starves the chat model's KV share
+# as the shift lands -> queued admissions -> TTFT SLO misses; the
+# arbiter reads attainment/queue/skew pressure and moves KV-block (and
+# dup-slot) quota toward it. All moves are quotas inside compiled
+# shapes, so BOTH legs must hold zero post-warmup recompiles.
+_FLEET_SUB = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax, numpy as np
+from repro.configs.registry import get_config
+from repro.fleet import (ArbiterConfig, BATCH, FleetAdmission, FleetEngine,
+                         FleetModelSpec, SLOClass)
+from repro.models.transformer import init_model
+from repro.serve import ContinuousConfig
+from repro.sweep.workloads import build_workload
+from repro.workloads import to_serve_requests
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = get_config("mixtral-8x7b").reduced()
+params = init_model(jax.random.PRNGKey(0), cfg)
+ccfg = ContinuousConfig(max_slots=4, prefill_len=32, block_size=8,
+                        max_len=48, strategy="dist_only",
+                        predict_interval=4, dup_slots=2, metrics_window=4,
+                        max_prefills_per_step=2)
+trace = build_workload("fleet_shift", cfg.vocab_size, horizon=20.0,
+                       rate=1.2, seed=0)
+DT = 0.25
+MAX_ITERS = 320
+
+def run_leg(enable_arbiter):
+    adm = FleetAdmission(
+        routes={"chat": "m-chat", "batch": "m-batch"},
+        slos={"chat": SLOClass("chat", slo_ttft=2.0, slo_tpot=1.0),
+              "batch": BATCH})
+    specs = [FleetModelSpec(n, cfg, params, ccfg,
+                            dup_slot_quota=1, kv_block_quota=12)
+             for n in ("m-chat", "m-batch")]
+    fleet = FleetEngine(
+        specs, mesh=mesh, ep_ranks=4, admission=adm,
+        arbiter_cfg=ArbiterConfig(window_iters=8, patience=2,
+                                  queue_norm=4.0, kv_blocks_per_move=4,
+                                  kv_floor_blocks=4),
+        enable_arbiter=enable_arbiter)
+    fleet.warmup()
+    for r in sorted(to_serve_requests(trace), key=lambda r: r.arrival):
+        fleet.submit(r)
+    now, n = 0.0, 0
+    while fleet.has_work() and n < MAX_ITERS:
+        fleet.step(now)
+        now += DT
+        n += 1
+    recompiled = 0
+    try:
+        fleet.assert_no_recompiles()
+    except AssertionError:
+        recompiled = 1
+    for eng in fleet.engines.values():
+        eng.metrics.flush(eng._plan_stack, eng.ep_ranks,
+                          eng.moe_cfg.duplication_slots)
+    s = fleet.summary()
+    return {
+        "fleet_slo_attainment": s["fleet_slo_attainment"],
+        "fleet_slo_attainment_worst": s["fleet_slo_attainment_worst"],
+        "fleet_arbiter_moves": s["fleet_arbiter_moves"],
+        "fleet_step_p50_ms": s["fleet_step_p50_ms"],
+        "fleet_step_p99_ms": s["fleet_step_p99_ms"],
+        "fleet_completed": s["fleet_completed"],
+        "chat_attainment": adm.model_attainment(
+            fleet.engines["m-chat"].metrics, "m-chat"),
+        "batch_attainment": adm.model_attainment(
+            fleet.engines["m-batch"].metrics, "m-batch"),
+        "chat_kv_quota": s["m-chat_kv_block_quota"],
+        "batch_kv_quota": s["m-batch_kv_block_quota"],
+        "chat_dup_quota": s["m-chat_dup_slot_quota"],
+        "recompiled": recompiled,
+        "drained": float(not fleet.has_work()),
+        "iterations": n,
+        "moves": (fleet.arbiter.explain().splitlines()
+                  if fleet.arbiter else []),
+    }
+
+out = {"submitted": len(trace),
+       "static": run_leg(False), "arbiter": run_leg(True)}
+print(json.dumps(out))
+"""
+
+
+def _run_fleet_ab(attempts: int = 2) -> dict:
+    import repro
+    src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    last = None
+    for _ in range(attempts):
+        try:
+            out = subprocess.run(
+                [sys.executable, "-c", textwrap.dedent(_FLEET_SUB)],
+                capture_output=True, text=True, timeout=1500,
+                env=dict(os.environ, PYTHONPATH=src_root))
+        except subprocess.TimeoutExpired as e:
+            last = f"timed out after {e.timeout}s"
+            continue
+        if out.returncode == 0:
+            return json.loads(out.stdout.strip().splitlines()[-1])
+        last = out.stderr[-2000:]
+    raise RuntimeError(f"fleet A/B subprocess failed:\n{last}")
 
 
 def _run_resched_ab(attempts: int = 2) -> dict:
@@ -387,6 +511,8 @@ def run(verbose: bool = True, smoke: bool = None):
     resched_ab = _run_resched_ab()
     dup_leg, res_leg = resched_ab["duplicate"], resched_ab["reschedule"]
     decode_ab = _run_decode_heavy(cfg, params, smoke)
+    fleet_ab = _run_fleet_ab()
+    fleet_static, fleet_arb = fleet_ab["static"], fleet_ab["arbiter"]
 
     merged = merge_traces([tracer.to_chrome(), meshed_doc],
                           names=["repro-serve-local", "repro-serve-meshed"])
@@ -434,6 +560,18 @@ def run(verbose: bool = True, smoke: bool = None):
              resched_step_p50_ms=res_leg["step_p50_ms"],
              resched_recompiled=float(res_leg["recompiled"]
                                       or dup_leg["recompiled"]),
+             # fleet A/B under traffic shift: static equal split vs
+             # cross-model arbiter, two resident models on one mesh
+             fleet_slo_attainment=fleet_arb["fleet_slo_attainment"],
+             fleet_slo_attainment_static=fleet_static[
+                 "fleet_slo_attainment"],
+             fleet_arbiter_moves=fleet_arb["fleet_arbiter_moves"],
+             fleet_step_p50_ms=fleet_arb["fleet_step_p50_ms"],
+             fleet_chat_attainment=fleet_arb["chat_attainment"],
+             fleet_chat_attainment_static=fleet_static["chat_attainment"],
+             fleet_recompiled=float(fleet_arb["recompiled"]
+                                    or fleet_static["recompiled"]),
+             fleet_completed=fleet_arb["fleet_completed"],
              # decode fast path (decode_heavy fused/gather A/B legs);
              # attn_phase_decode_us is the decode-shaped attn kernel
              # phase from the dispatch re-profile above
@@ -497,6 +635,19 @@ def run(verbose: bool = True, smoke: bool = None):
               f"plans={res_leg['resched_plans']:.0f}, "
               f"p50 {dup_leg['step_p50_ms']:.0f}ms -> "
               f"{res_leg['step_p50_ms']:.0f}ms)")
+        print(f"fleet A/B (traffic shift, 2 models @ 2x4 mesh): "
+              f"attainment static={fleet_static['fleet_slo_attainment']:.2f} "
+              f"-> arbiter={fleet_arb['fleet_slo_attainment']:.2f} "
+              f"(chat {fleet_static['chat_attainment']:.2f} -> "
+              f"{fleet_arb['chat_attainment']:.2f}), "
+              f"moves={int(fleet_arb['fleet_arbiter_moves'])}, "
+              f"chat kv quota {int(fleet_static['chat_kv_quota'])} -> "
+              f"{int(fleet_arb['chat_kv_quota'])} of 24, "
+              f"dup quota -> {int(fleet_arb['chat_dup_quota'])}, "
+              f"step p50={fleet_arb['fleet_step_p50_ms']:.0f}ms, "
+              f"recompiles={int(s['fleet_recompiled'])}")
+        for line in fleet_arb["moves"]:
+            print("  " + line)
         print(f"decode fast path (decode_heavy A/B): "
               f"{decode_ab['decode_toks_per_s']:.0f} decode tok/s, "
               f"roofline fused_vs_gather="
@@ -569,6 +720,23 @@ def run(verbose: bool = True, smoke: bool = None):
         f"attention roofline ratio "
         f"{decode_ab['fused_vs_gather_speedup']:.3f} < 1.0 — live-block "
         f"accounting is broken")
+    # fleet A/B acceptance: the static equal split must visibly violate
+    # the hot tenant's SLO, the arbiter leg must commit >= 1 move and
+    # recover attainment, and neither leg may recompile after warmup
+    assert fleet_static["chat_attainment"] < 0.9, (
+        f"static split never starved the chat tenant "
+        f"(attainment {fleet_static['chat_attainment']:.2f}) — the fleet "
+        f"A/B pressure recipe is broken")
+    assert fleet_arb["fleet_arbiter_moves"] >= 1, \
+        "arbiter committed no moves under a sustained traffic shift"
+    assert fleet_arb["fleet_slo_attainment"] \
+        > fleet_static["fleet_slo_attainment"], (
+        f"arbiter leg did not beat the static split: "
+        f"{fleet_arb['fleet_slo_attainment']:.2f} vs "
+        f"{fleet_static['fleet_slo_attainment']:.2f}")
+    assert fleet_static["drained"] and fleet_arb["drained"], fleet_ab
+    assert s["fleet_recompiled"] == 0.0, \
+        "fleet legs recompiled after warmup — a quota move changed shapes"
 
     derived = (f"completed={n_completed}/{len(trace)} "
                f"switches={n_switches} "
@@ -579,7 +747,10 @@ def run(verbose: bool = True, smoke: bool = None):
                f"meshed_p50={s['meshed_step_p50_ms']:.0f}ms "
                f"resched_absorbed={s['overflow_absorbed_frac']:.2f} "
                f"decode_tok_s={s['decode_toks_per_s']:.0f} "
-               f"attn_roofline={s['fused_vs_gather_speedup']:.2f}x")
+               f"attn_roofline={s['fused_vs_gather_speedup']:.2f}x "
+               f"fleet_slo={s['fleet_slo_attainment_static']:.2f}->"
+               f"{s['fleet_slo_attainment']:.2f} "
+               f"(moves={int(s['fleet_arbiter_moves'])})")
     return s, derived
 
 

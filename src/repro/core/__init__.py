@@ -4,7 +4,7 @@ from repro.core.duplication import (DuplicationResult, bottleneck_load,
                                     duplicate_experts_host,
                                     duplicate_experts_jax, skewness)
 from repro.core.placement import (PlacementPlan, identity_plan,
-                                  plan_from_assignments)
+                                  plan_from_assignments, quota_limited_plan)
 from repro.core.simulator import (A100_NVLINK, A100_PCIE, TPU_V5E_16,
                                   TPU_V5E_DCN, TPU_V5E_POD, HardwareConfig,
                                   LatencyBreakdown, layer_latency)
@@ -17,6 +17,6 @@ __all__ = [
     "StrategyVerdict", "T2EPoint", "TPU_V5E_16", "TPU_V5E_DCN",
     "TPU_V5E_POD", "bottleneck_load", "duplicate_experts_host",
     "duplicate_experts_jax", "identity_plan", "layer_latency",
-    "plan_from_assignments", "recommend_strategy", "run_gps", "skewness",
-    "sweep",
+    "plan_from_assignments", "quota_limited_plan", "recommend_strategy",
+    "run_gps", "skewness", "sweep",
 ]

@@ -124,6 +124,33 @@ def clamp_dup_slots(num_experts: int, ep_ranks: int, dup_slots: int, *,
     return d
 
 
+def quota_limited_plan(assignments, num_experts: int, ep_ranks: int,
+                       dup_slots: int, max_copies: int, *,
+                       quota: int) -> PlacementPlan:
+    """Plan at the FULL compiled replica-slot geometry, using at most
+    ``quota`` replica slots per rank.
+
+    The fleet arbiter moves duplication capacity between co-resident
+    models as a *logical* quota: every engine keeps the ``dup_slots`` it
+    compiled with (so no jit signature ever changes), but the planner's
+    extra-copy assignments are truncated to the first ``quota`` per
+    destination rank. ``quota=0`` degenerates to the identity plan at
+    full geometry; ``quota>=dup_slots`` is the unrestricted plan.
+    """
+    q = max(0, min(int(quota), int(dup_slots)))
+    if q < dup_slots:
+        taken = np.zeros((ep_ranks,), np.int64)
+        kept = []
+        for expert, dest in assignments:
+            if taken[dest] >= q:
+                continue
+            taken[dest] += 1
+            kept.append((expert, dest))
+        assignments = kept
+    return plan_from_assignments(assignments, num_experts, ep_ranks,
+                                 dup_slots, max_copies)
+
+
 def plan_from_assignments(assignments, num_experts: int, ep_ranks: int,
                           dup_slots: int, max_copies: int) -> PlacementPlan:
     """Build a PlacementPlan from a host-side list of extra copies.

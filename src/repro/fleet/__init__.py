@@ -1,0 +1,30 @@
+"""Multi-tenant fleet serving: N models, one HBM budget, one arbiter.
+
+  ``FleetBudget``    — per-rank byte ledger over (weights + replica-store
+                       dup slots + paged KV blocks), with the global
+                       clamp `core.placement.clamp_dup_slots` only ever
+                       applied per model in isolation.
+  ``FleetAdmission`` — tenant -> model routing + per-tenant SLO classes.
+  ``FleetArbiter``   — windowed quota reallocation (hysteresis + the
+                       `runtime.cost.should_migrate` cost gate).
+  ``FleetEngine``    — N `ContinuousEngine` instances time-sharing one
+                       mesh, each with its own online GPS loop; all
+                       arbiter moves are logical quotas inside compiled
+                       shapes, so zero post-warmup recompiles hold
+                       fleet-wide.
+"""
+
+from repro.fleet.admission import (BATCH, INTERACTIVE, FleetAdmission,
+                                   SLOClass)
+from repro.fleet.arbiter import (ArbiterConfig, ArbiterMove, FleetArbiter,
+                                 ModelSignals)
+from repro.fleet.budget import (FleetBudget, ModelShare, kv_block_bytes,
+                                params_bytes)
+from repro.fleet.engine import FleetEngine, FleetModelSpec
+
+__all__ = [
+    "ArbiterConfig", "ArbiterMove", "BATCH", "FleetAdmission", "FleetArbiter",
+    "FleetBudget", "FleetEngine", "FleetModelSpec", "INTERACTIVE",
+    "ModelShare", "ModelSignals", "SLOClass", "kv_block_bytes",
+    "params_bytes",
+]

@@ -58,6 +58,9 @@ class GPSAuditRecord:
     resched_extra_frac: float = 0.0  # rescue-round a2a surcharge fed in
     overflow_pred_frac: float = 0.0  # scheduler-predicted overflow absorbed
     overflow_realized_frac: float = -1.0  # engine-realized (-1 = no overflow)
+    # Model instance this verdict belongs to (fleet serving: one audit log
+    # per resident model). Defaults empty so pre-fleet JSONL rows load.
+    model: str = ""
 
     def explain(self) -> str:
         verdict = (self.recommended if self.recommended == "none"
@@ -72,7 +75,9 @@ class GPSAuditRecord:
             resched = (f"resched(save={self.resched_saving:.1%}, "
                        f"absorbed pred={self.overflow_pred_frac:.0%}/"
                        f"real={realized}) ")
-        return (f"[{self.seq}] t={self.t:8.2f}s skew={self.skew_measured:.2f}"
+        tag = f"{self.model} " if self.model else ""
+        return (f"[{tag}{self.seq}] t={self.t:8.2f}s "
+                f"skew={self.skew_measured:.2f}"
                 f"->{self.skew_input:.2f} vol={self.volatility:.3f} "
                 f"mig={self.migration_bytes / 1e6:.2f}MB "
                 f"(hidden {self.migration_hidden_frac:.0%}, "
@@ -86,12 +91,15 @@ class GPSAuditRecord:
 class GPSAuditLog:
     """Bounded append-only record of controller evaluations."""
 
-    def __init__(self, maxlen: int = 4096):
+    def __init__(self, maxlen: int = 4096, model: str = ""):
         self.maxlen = int(maxlen)
+        self.model = model
         self.records: List[GPSAuditRecord] = []
         self.dropped = 0
 
     def append(self, rec: GPSAuditRecord) -> None:
+        if self.model and not rec.model:
+            rec.model = self.model
         if len(self.records) >= self.maxlen:
             self.records.pop(0)
             self.dropped += 1

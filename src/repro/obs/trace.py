@@ -212,19 +212,50 @@ NULL_TRACER = SpanTracer(capacity=1, enabled=False)
 
 def merge_traces(docs: Sequence[Dict[str, Any]],
                  names: Optional[Sequence[str]] = None) -> Dict[str, Any]:
-    """Merge Chrome trace documents into one, re-keying each doc's pids so
-    processes stay distinct rows (the bench merges the meshed-subprocess
-    engine's trace into the driver's)."""
+    """Merge Chrome trace documents into one, re-keying pids so processes
+    stay distinct rows (the bench merges the meshed-subprocess engine's
+    trace into the driver's; the fleet merges one doc per model instance).
+
+    Every distinct (input doc, original pid) pair gets a fresh pid, so
+    the merge is collision-free for any number of docs including docs
+    that already carry several processes. With ``names``, each merged
+    process row is tagged with its doc's model/tenant name: a single-pid
+    doc's process is renamed to exactly ``names[i]``; a multi-pid doc's
+    processes become ``"{names[i]}/{original}"`` so sibling processes
+    inside one doc stay distinguishable."""
     merged: Dict[str, Any] = {"traceEvents": [], "displayTimeUnit": "ms",
                               "otherData": {}}
+    next_pid = 1
     for i, doc in enumerate(docs):
-        for ev in doc.get("traceEvents", []):
+        events = doc.get("traceEvents", [])
+        pid_map: Dict[Any, int] = {}
+        for ev in events:
+            p = ev.get("pid", 0)
+            if p not in pid_map:
+                pid_map[p] = next_pid
+                next_pid += 1
+        name = names[i] if names and i < len(names) else None
+        multi = len(pid_map) > 1
+        named_pids = set()
+        for ev in events:
             ev = dict(ev)
-            ev["pid"] = i + 1
-            if (names and i < len(names) and ev.get("ph") == "M"
+            orig = ev.get("pid", 0)
+            ev["pid"] = pid_map[orig]
+            if (name is not None and ev.get("ph") == "M"
                     and ev.get("name") == "process_name"):
-                ev["args"] = {"name": names[i]}
+                old = (ev.get("args") or {}).get("name", orig)
+                ev["args"] = {"name": f"{name}/{old}" if multi else name}
+                named_pids.add(orig)
             merged["traceEvents"].append(ev)
+        if name is not None:
+            # docs missing a process_name metadata row still get tagged
+            for orig, pid in pid_map.items():
+                if orig not in named_pids:
+                    merged["traceEvents"].append(
+                        {"ph": "M", "name": "process_name", "pid": pid,
+                         "tid": 0,
+                         "args": {"name": f"{name}/{orig}" if multi
+                                  else name}})
         for k, v in doc.get("otherData", {}).items():
             merged["otherData"][f"p{i + 1}_{k}" if k in merged["otherData"]
                                 or len(docs) > 1 else k] = v

@@ -31,7 +31,7 @@ from repro.runtime.cost import (KindWindowEMA, entry_bytes,
                                 plan_migration_bytes, should_migrate,
                                 split_hidden_exposed)
 from repro.runtime.diff import (PlanDiff, apply_diff, plan_diff, plans_equal,
-                                stacked_slot_experts)
+                                stacked_slot_experts, vacated_slots)
 from repro.runtime.migrate import (LayerStagedExecutor, MigrationExecutor,
                                    make_migrate_step, migrate_all)
 from repro.runtime.store import ReplicaStore
@@ -42,5 +42,5 @@ __all__ = [
     "apply_diff", "entry_bytes", "make_migrate_step", "migrate_all",
     "migration_stall_s", "overlap_chunk_budget", "plan_diff",
     "plan_migration_bytes", "plans_equal", "should_migrate",
-    "split_hidden_exposed", "stacked_slot_experts",
+    "split_hidden_exposed", "stacked_slot_experts", "vacated_slots",
 ]

@@ -67,6 +67,21 @@ def plan_diff(old_stack: PlacementPlan, new_stack: PlacementPlan,
                     target_slot_experts=se_new)
 
 
+def vacated_slots(old_stack: PlacementPlan, new_stack: PlacementPlan,
+                  ep_ranks: int, dup_slots: int) -> int:
+    """Slot-entries LIVE under the old plan but UNUSED under the new one.
+
+    This is the fleet arbiter's shrink accounting: when a cold model's
+    dup-slot quota drops, the next re-plan leaves replica slots with
+    ``expert == -1`` — those entries move ZERO bytes (round-robin dispatch
+    never reads an unused slot, see the module docstring), so shrinking a
+    replica set is free and only growth pays migration stall. The count
+    times ``entry_bytes`` is the HBM the budget ledger hands back."""
+    se_old = stacked_slot_experts(old_stack, ep_ranks, dup_slots)
+    se_new = stacked_slot_experts(new_stack, ep_ranks, dup_slots)
+    return int(np.count_nonzero((se_old >= 0) & (se_new < 0)))
+
+
 def plans_equal(a: PlacementPlan, b: PlacementPlan) -> bool:
     """True iff two stacked plans are identical in EVERY array (slot map
     AND replica counts/tables — two plans can share a slot map yet split

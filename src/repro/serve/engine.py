@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.duplication import duplicate_experts_host
-from repro.core.placement import PlacementPlan, identity_plan, stack_plans
+from repro.core.placement import (PlacementPlan, identity_plan,
+                                  quota_limited_plan, stack_plans)
 from repro.core.predictors import DistributionEstimator
 from repro.models.transformer import Runtime, init_cache
 from repro.obs.accuracy import PredictorAccuracyTracker
@@ -649,7 +650,8 @@ class ContinuousEngine(_OverlapStoreMixin):
 
     def __init__(self, cfg: ModelConfig, params, ccfg: ContinuousConfig,
                  mesh=None, ep_ranks: int = 1, predictor=None,
-                 controller=None, tracer=None):
+                 controller=None, tracer=None, metrics=None,
+                 model: str = ""):
         if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
             raise ValueError(f"{cfg.family}: continuous batching supports "
                              "uniform-stack decoder-only architectures")
@@ -670,6 +672,7 @@ class ContinuousEngine(_OverlapStoreMixin):
         self.predictor = predictor
         self.controller = controller
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.model = model
         self.strategy = ccfg.strategy
         self.lever = ccfg.lever
         self.predict_interval = ccfg.predict_interval
@@ -707,6 +710,10 @@ class ContinuousEngine(_OverlapStoreMixin):
                 cfg.moe, duplication_slots=dup_slots,
                 max_copies=ccfg.max_copies,
                 overlap_migration=self._overlap)
+            # logical duplication quota <= the compiled dup_slots: a fleet
+            # arbiter moves capacity between co-resident models by moving
+            # this number, never a shape (see set_dup_slot_quota)
+            self.dup_slot_quota = dup_slots
             cfg = dataclasses.replace(cfg, moe=self.moe_cfg)
             self.estimator = DistributionEstimator(
                 cfg.num_layers, cfg.moe.num_experts, ema=ccfg.ema)
@@ -717,6 +724,7 @@ class ContinuousEngine(_OverlapStoreMixin):
             self.estimator = None
             self.accuracy = None
             self._overlap = False
+            self.dup_slot_quota = 0
         self.cfg = cfg
         self.params = params
 
@@ -732,7 +740,8 @@ class ContinuousEngine(_OverlapStoreMixin):
         self.scheduler = ContinuousScheduler(
             ccfg.max_slots, ccfg.prefill_len, ccfg.max_len, self.allocator,
             max_prefills_per_step=ccfg.max_prefills_per_step)
-        self.metrics = ServeMetrics(window_iters=ccfg.metrics_window)
+        self.metrics = metrics if metrics is not None else \
+            ServeMetrics(window_iters=ccfg.metrics_window)
         self._last_tokens = np.zeros((ccfg.max_slots,), np.int32)
 
         self._prefill_fn = jax.jit(make_slot_prefill_step(cfg, self.rt))
@@ -821,14 +830,34 @@ class ContinuousEngine(_OverlapStoreMixin):
             self._replan_resched()
             return self._plan_stack
         dist = self.estimator.predict()
-        plans = [duplicate_experts_host(dist[l], self.ep_ranks,
-                                        m.duplication_slots, m.max_copies).plan
-                 for l in range(self.cfg.num_layers)]
+        q = max(0, min(self.dup_slot_quota, m.duplication_slots))
+        if q == m.duplication_slots:
+            plans = [duplicate_experts_host(
+                dist[l], self.ep_ranks, m.duplication_slots,
+                m.max_copies).plan for l in range(self.cfg.num_layers)]
+        else:
+            # quota-limited: plan with only q replica slots, then rebuild
+            # at the FULL compiled geometry so no traced shape changes
+            plans = [quota_limited_plan(
+                duplicate_experts_host(dist[l], self.ep_ranks, q,
+                                       m.max_copies).assignments,
+                m.num_experts, self.ep_ranks, m.duplication_slots,
+                m.max_copies, quota=q) for l in range(self.cfg.num_layers)]
         out = self._adopt_plan(stack_plans(plans))
         if self.lever == "reschedule":
             self._resched_frozen = True
         self._replan_resched()
         return out
+
+    def set_dup_slot_quota(self, quota: int) -> None:
+        """Cap replica slots the planner may USE (per rank) below the
+        compiled ``dup_slots``. Takes effect at the next re-plan: shrink
+        strands now-unused slots (zero transfer — see
+        ``runtime.diff.vacated_slots``), growth migrates weights in
+        through the normal plan-diff path."""
+        if self.cfg.is_moe:
+            self.dup_slot_quota = max(
+                0, min(int(quota), self.moe_cfg.duplication_slots))
 
     def _replan_resched(self):
         """Recompute the (L, E, C_max) quota stack from the estimator's
@@ -1353,8 +1382,10 @@ class ContinuousEngine(_OverlapStoreMixin):
         iter_counts = None
         prefill_tokens = 0
         ctx = self.mesh or _nullcontext()
-        step_span = self.tracer.span("step",
-                                     args={"iteration": self.iterations})
+        step_args = {"iteration": self.iterations}
+        if self.model:
+            step_args["model"] = self.model
+        step_span = self.tracer.span("step", args=step_args)
         step_span.__enter__()
         self._step_migration_bytes = 0.0
         self._step_migration_hidden_bytes = 0.0

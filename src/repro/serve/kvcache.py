@@ -54,7 +54,15 @@ def write_prefill_blocks(pool: Dict[str, jnp.ndarray],
 
 
 class BlockAllocator:
-    """Host-side free-list over the physical blocks (block 0 reserved)."""
+    """Host-side free-list over the physical blocks (block 0 reserved).
+
+    ``quota`` caps *in-use* blocks below the physical pool size, so a
+    fleet arbiter can carve one physical pool into per-model shares and
+    move capacity between them without reshaping any device array.
+    Shrinking the quota below current usage is legal: nothing is
+    reclaimed eagerly, the allocator just refuses growth until enough
+    blocks drain back through ``free`` (deferred handback).
+    """
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks < 2:
@@ -62,17 +70,31 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: deque = deque(range(1, num_blocks))
+        self._quota = num_blocks - 1
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
+    @property
+    def in_use(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    @property
+    def quota(self) -> int:
+        return self._quota
+
+    def set_quota(self, n: int) -> None:
+        """Cap in-use blocks at ``n`` (clamped to the physical pool)."""
+        self._quota = max(0, min(int(n), self.num_blocks - 1))
+
     def blocks_for(self, num_tokens: int) -> int:
         return -(-num_tokens // self.block_size)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n physical blocks, or None (all-or-nothing) if the pool is dry."""
-        if n > len(self._free):
+        """n physical blocks, or None (all-or-nothing) if the pool is dry
+        or the grant would exceed the quota."""
+        if n > len(self._free) or self.in_use + n > self._quota:
             return None
         return [self._free.popleft() for _ in range(n)]
 

@@ -128,14 +128,21 @@ class ServeMetrics:
 
     def __init__(self, window_iters: int = 16, slo_ttft: float = float("inf"),
                  slo_tpot: float = float("inf"),
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 model: str = ""):
         self.window_iters = window_iters
         self.slo_ttft = slo_ttft
         self.slo_tpot = slo_tpot
         # every summary() key is published here as a serve_* gauge, and
         # per-request timings as histograms — scrape via
-        # registry.to_prometheus() / registry.to_jsonl()
+        # registry.to_prometheus() / registry.to_jsonl(). When several
+        # model instances share one registry (fleet serving), ``model``
+        # becomes a label on every serve_* series so co-resident engines
+        # don't overwrite each other; empty keeps the historical unlabeled
+        # series names.
         self.registry = registry if registry is not None else MetricsRegistry()
+        self.model = model
+        self._labels: Dict[str, str] = {"model": model} if model else {}
         self.timings: List[RequestTiming] = []
         self.windows: List[WindowRecord] = []
         self.phase_times: Dict[str, float] = {}   # dispatch phase breakdown
@@ -292,15 +299,17 @@ class ServeMetrics:
         if self._win is not None:
             self._win.completions += 1
         reg = self.registry
+        lbl = self._labels
         reg.counter("serve_requests_completed_total",
-                    "Requests that finished decoding").inc()
+                    "Requests that finished decoding", **lbl).inc()
         reg.histogram("serve_ttft_seconds",
-                      "Time to first token").observe(t.ttft)
+                      "Time to first token", **lbl).observe(t.ttft)
         if t.new_tokens > 1:
             reg.histogram("serve_tpot_seconds",
-                          "Mean inter-token time per request").observe(t.tpot)
+                          "Mean inter-token time per request",
+                          **lbl).observe(t.tpot)
         reg.histogram("serve_latency_seconds",
-                      "End-to-end request latency").observe(t.latency)
+                      "End-to-end request latency", **lbl).observe(t.latency)
 
     # ------------------------------------------------- predictor accuracy
     def record_accuracy(self, hit_rate: float, kl: float) -> None:
@@ -315,10 +324,10 @@ class ServeMetrics:
         reg = self.registry
         reg.gauge("serve_pred_hit_rate",
                   "Predictor top-1 hot-expert hit rate, last closed "
-                  "prediction window").set(float(hit_rate))
+                  "prediction window", **self._labels).set(float(hit_rate))
         reg.gauge("serve_pred_kl",
                   "KL(realized || predicted), last closed prediction "
-                  "window").set(float(kl))
+                  "window", **self._labels).set(float(kl))
 
     # -------------------------------------------------------------- summary
     def summary(self) -> Dict[str, float]:
@@ -388,8 +397,27 @@ class ServeMetrics:
         # hand-rolled aggregation path
         for k, v in out.items():
             self.registry.gauge(
-                f"serve_{k}", f"ServeMetrics summary column {k}").set(v)
+                f"serve_{k}", f"ServeMetrics summary column {k}",
+                **self._labels).set(v)
         return out
+
+    # --------------------------------------------------------- SLO per tenant
+    def slo_attainment(self, *, tenant: Optional[str] = None,
+                       slo_ttft: Optional[float] = None,
+                       slo_tpot: Optional[float] = None) -> float:
+        """Fraction of completed requests meeting the SLOs, optionally
+        restricted to one tenant and/or overriding the instance SLOs with
+        a tenant class's targets. 1.0 with no matching completions — no
+        evidence of violation is not a violation (the fleet arbiter must
+        not starve a model for having served nothing yet)."""
+        ttft = self.slo_ttft if slo_ttft is None else slo_ttft
+        tpot = self.slo_tpot if slo_tpot is None else slo_tpot
+        ts = [t for t in self.timings
+              if tenant is None or t.tenant == tenant]
+        if not ts:
+            return 1.0
+        good = sum(1 for t in ts if t.ttft <= ttft and t.tpot <= tpot)
+        return good / len(ts)
 
     def imbalance_over_time(self) -> List[float]:
         return [w.imbalance for w in self.windows]

@@ -195,6 +195,15 @@ class ContinuousScheduler:
     def has_work(self) -> bool:
         return bool(self.waiting) or any(r is not None for r in self.slots)
 
+    def queue_depth(self, now: Optional[float] = None) -> int:
+        """Waiting requests eligible to run (arrived by ``now``; all of
+        them when ``now`` is None). The fleet arbiter reads this as the
+        admission-backpressure signal: a persistently deep queue means
+        the model's slot/KV share is starving it."""
+        if now is None:
+            return len(self.waiting)
+        return sum(1 for r in self.waiting if r.arrival <= now)
+
     @property
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]

@@ -11,6 +11,9 @@
 
   PYTHONPATH=src python -m repro.sweep manifests --out-dir k8s/ \
       [--image IMAGE] [--namespace NS] [--full]
+
+  PYTHONPATH=src python -m repro.sweep collect --dir RESULTS_DIR \
+      [--history benchmarks/history.jsonl] [--pattern '*.json']
 """
 
 from __future__ import annotations
@@ -78,6 +81,15 @@ def cmd_manifests(args) -> int:
     return 0
 
 
+def cmd_collect(args) -> int:
+    from repro.sweep.collect import collect_results
+    from repro.sweep.runner import sweep_meta
+    report = collect_results(args.dir, args.history, meta=sweep_meta(),
+                             pattern=args.pattern)
+    print(report.summarize())
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.sweep",
                                  description=__doc__)
@@ -112,6 +124,14 @@ def main(argv=None) -> int:
     man_p.add_argument("--smoke", action="store_true")
     _add_axis_filters(man_p)
     man_p.set_defaults(fn=cmd_manifests)
+
+    col_p = sub.add_parser(
+        "collect", help="ingest per-point cluster result docs into history")
+    col_p.add_argument("--dir", required=True,
+                       help="directory of completed sweep.job JSON docs")
+    col_p.add_argument("--history", default="benchmarks/history.jsonl")
+    col_p.add_argument("--pattern", default="*.json")
+    col_p.set_defaults(fn=cmd_collect)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -141,6 +141,6 @@ FULL_SPEC = SweepSpec(
     meshes=(MeshShape(1, 4), MeshShape(2, 2), MeshShape(2, 4),
             MeshShape(2, 8)),
     workloads=("steady", "skew_shift", "diurnal", "multi_tenant",
-               "decode_heavy"),
+               "decode_heavy", "fleet_shift"),
     strategies=("dist_only", "token_to_expert") + LEVER_STRATEGIES,
 )

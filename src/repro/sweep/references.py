@@ -29,8 +29,24 @@ TOLERANCE_RULES: Tuple[Tuple[str, Tuple[Optional[float],
     # quality ratios: bounded below (regression), unbounded above
     (r"speedup", (0.5, None)),
     (r"hidden_fraction", (0.5, None)),
+    # dist-predictor accuracy is judged over however many windows the
+    # controller happened to spend in dist_only — a 3-11 window sample
+    # whose count is wall-clock sensitive, so the rate swings ~2x run to
+    # run at the same sha. Band it loosely: only a collapse toward zero
+    # (the predictor stops landing at all) should gate.
+    (r"^pred_dist_hit_rate$", (0.8, None)),
     (r"hit_rate", (0.5, None)),
     (r"^throughput_", (0.8, None)),
+    # fleet A/B: SLO attainment on both legs is bounded below (the
+    # static leg's under-attainment is the experiment's premise, so it
+    # too must not collapse — a static leg that stops starving means
+    # the A/B no longer demonstrates anything); the arbiter leg must
+    # keep committing at least one quota move (ref 1, floor at 0.1
+    # catches the lever silently disengaging). fleet_step_p50_ms rides
+    # the generic step_p rule below; fleet_recompiled the recompile
+    # rule above.
+    (r"fleet_.*attainment", (0.5, None)),
+    (r"^fleet_arbiter_moves$", (0.9, None)),
     # token rescheduling: the realized absorbed fraction (1 - drops /
     # capacity overflow) must stay >= 0.5x its reference; rescue-round
     # a2a traffic must not silently vanish (that would mean the lever

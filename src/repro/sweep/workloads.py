@@ -78,12 +78,39 @@ def _decode_heavy(vocab: int, horizon: float, rate: float,
     return make_trace([spec], horizon, seed=seed)
 
 
+def _fleet_shift(vocab: int, horizon: float, rate: float,
+                 seed: int) -> List[TraceRequest]:
+    """The fleet A/B trace: an interactive chat tenant whose load ramps
+    up monotonically through the session (diurnal thinning with period
+    4x horizon: rate -> 2x rate) while its corpus concentrates on a hot
+    topic, against a steady flat batch tenant. Under a static equal HBM
+    split the chat model starves as the shift lands; the cross-model
+    arbiter should move KV/dup-slot quota toward it."""
+    broad = Topic("broad", zipf_alpha=0.5, vocab_frac=1.0, seed=1)
+    hot = Topic("hot", zipf_alpha=3.0, vocab_frac=0.05, seed=2)
+    corpus_chat = ShiftingCorpus(vocab, [broad, hot], schedule=[
+        (0.0, [1.0, 0.0]), (0.4 * horizon, [0.3, 0.7]),
+        (horizon, [0.2, 0.8])])
+    corpus_batch = ShiftingCorpus(vocab, [broad], schedule=[(0.0, [1.0])])
+    tenants = [
+        TenantSpec("chat", corpus_chat, arrivals="diurnal", rate=rate,
+                   diurnal_amplitude=1.0, diurnal_period=4.0 * horizon,
+                   prompt_len_mean=24.0, prompt_len_max=64,
+                   out_len_mean=6.0, out_len_max=16),
+        TenantSpec("batch", corpus_batch, arrivals="poisson", rate=rate / 2,
+                   prompt_len_mean=24.0, prompt_len_max=64,
+                   out_len_mean=8.0, out_len_max=16),
+    ]
+    return make_trace(tenants, horizon, seed=seed)
+
+
 WORKLOADS = {
     "steady": _steady,
     "skew_shift": _skew_shift,
     "diurnal": _diurnal,
     "multi_tenant": _multi_tenant,
     "decode_heavy": _decode_heavy,
+    "fleet_shift": _fleet_shift,
 }
 
 

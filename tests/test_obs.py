@@ -91,6 +91,51 @@ def test_merge_traces_rekeys_pids():
             if e.get("name") == "process_name"} == {"one", "two"}
 
 
+def test_merge_traces_three_docs_collision_free():
+    tracers = [SpanTracer(process_name=f"p{i}") for i in range(3)]
+    for i, tr in enumerate(tracers):
+        tr.instant(f"ev{i}")
+    doc = merge_traces([t.to_chrome() for t in tracers],
+                       names=["m-a", "m-b", "m-c"])
+    assert validate_chrome_trace(doc) == []
+    pids = {e["pid"] for e in doc["traceEvents"]}
+    assert len(pids) == 3                      # no pid collisions
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("name") == "process_name"}
+    assert names == {"m-a", "m-b", "m-c"}
+
+
+def test_merge_traces_multi_pid_doc_keeps_processes_distinct():
+    # one doc already carrying two processes (a prior merge), merged with
+    # a single-pid doc: all three processes get fresh distinct pids and
+    # the multi-pid doc's rows keep their sibling-distinguishing suffix
+    t1, t2 = SpanTracer(process_name="eng"), SpanTracer(process_name="drv")
+    t1.instant("a")
+    t2.instant("b")
+    inner = merge_traces([t1.to_chrome(), t2.to_chrome()],
+                         names=["eng", "drv"])
+    t3 = SpanTracer(process_name="late")
+    t3.instant("c")
+    doc = merge_traces([inner, t3.to_chrome()], names=["fleet", "m2"])
+    assert validate_chrome_trace(doc) == []
+    assert len({e["pid"] for e in doc["traceEvents"]}) == 3
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("name") == "process_name"}
+    assert names == {"fleet/eng", "fleet/drv", "m2"}
+
+
+def test_merge_traces_tags_docs_missing_process_name_rows():
+    bare = {"traceEvents": [
+        {"ph": "i", "name": "x", "pid": 7, "tid": 0, "ts": 0.0, "s": "t"}]}
+    t = SpanTracer(process_name="real")
+    t.instant("y")
+    doc = merge_traces([bare, t.to_chrome()], names=["synth", "real"])
+    rows = {e["pid"]: e["args"]["name"] for e in doc["traceEvents"]
+            if e.get("name") == "process_name"}
+    assert set(rows.values()) == {"synth", "real"}
+    assert len(rows) == 2
+
+
 def test_validator_rejects_malformed_docs():
     assert validate_chrome_trace([]) != []
     assert validate_chrome_trace({}) != []

@@ -331,6 +331,87 @@ class TestReport:
 # gate CLIs (check_regression bugfix + check_trend)
 # ---------------------------------------------------------------------------
 
+class TestCollect:
+    @staticmethod
+    def _job_doc(key, *, ok=True, sha=None, metrics=None):
+        doc = {"schema": 1, "kind": "sweep-job", "key": key,
+               "config": {"smoke": True}, "ok": ok, "wall_s": 1.5,
+               "metrics": metrics or {"step_p50_ms": 10.0}}
+        if sha is not None:
+            doc["meta"] = {"git_sha": sha, "timestamp_utc": "t0"}
+        return doc
+
+    def test_collect_skips_torn_and_non_job_docs(self, tmp_path):
+        from repro.sweep.collect import collect_results
+        d = tmp_path / "results"
+        d.mkdir()
+        (d / "a.json").write_text(json.dumps(self._job_doc("k-a")))
+        (d / "torn.json").write_text('{"kind": "sweep-job", "key"')
+        (d / "report.json").write_text(json.dumps({"kind": "report"}))
+        hist = tmp_path / "h.jsonl"
+        rep = collect_results(str(d), str(hist), meta={"git_sha": "s1"})
+        assert [len(rep.appended), len(rep.torn), len(rep.skipped),
+                len(rep.duplicates)] == [1, 1, 1, 0]
+        entries = load_history(str(hist))
+        assert len(entries) == 1
+        assert entries[0]["key"] == "k-a"
+        assert entries[0]["git_sha"] == "s1"
+        assert entries[0]["kind"] == "sweep"
+        assert "1/3" in rep.summarize()
+
+    def test_collect_is_idempotent_across_reruns(self, tmp_path):
+        from repro.sweep.collect import collect_results
+        d = tmp_path / "results"
+        d.mkdir()
+        (d / "a.json").write_text(json.dumps(self._job_doc("k-a")))
+        (d / "b.json").write_text(json.dumps(self._job_doc("k-b")))
+        hist = tmp_path / "h.jsonl"
+        meta = {"git_sha": "s1"}
+        assert len(collect_results(str(d), str(hist), meta).appended) == 2
+        rep = collect_results(str(d), str(hist), meta)
+        assert len(rep.appended) == 0 and len(rep.duplicates) == 2
+        assert len(load_history(str(hist))) == 2
+
+    def test_collect_doc_meta_overrides_supplied_meta(self, tmp_path):
+        from repro.sweep.collect import collect_results
+        d = tmp_path / "results"
+        d.mkdir()
+        (d / "a.json").write_text(
+            json.dumps(self._job_doc("k-a", sha="doc-sha")))
+        hist = tmp_path / "h.jsonl"
+        collect_results(str(d), str(hist), meta={"git_sha": "cli-sha"})
+        assert load_history(str(hist))[0]["git_sha"] == "doc-sha"
+        # a NEW sha for the same key is a fresh measurement, not a dup
+        rep = collect_results(str(d), str(hist), meta={"git_sha": "other"})
+        assert len(rep.duplicates) == 1        # doc sha still wins
+
+    def test_collect_same_key_in_one_batch_deduped(self, tmp_path):
+        from repro.sweep.collect import collect_results
+        d = tmp_path / "results"
+        d.mkdir()
+        (d / "a.json").write_text(json.dumps(self._job_doc("k-a")))
+        (d / "a_retry.json").write_text(json.dumps(self._job_doc("k-a")))
+        hist = tmp_path / "h.jsonl"
+        rep = collect_results(str(d), str(hist), meta={"git_sha": "s1"})
+        assert len(rep.appended) == 1 and len(rep.duplicates) == 1
+
+    def test_collect_cli_end_to_end(self, tmp_path, capsys):
+        from repro.sweep.__main__ import main
+        d = tmp_path / "results"
+        d.mkdir()
+        (d / "a.json").write_text(
+            json.dumps(self._job_doc("k-cli", sha="s9")))
+        hist = tmp_path / "h.jsonl"
+        rc = main(["collect", "--dir", str(d), "--history", str(hist)])
+        assert rc == 0
+        assert "collected 1/1" in capsys.readouterr().out
+        entries = load_history(str(hist))
+        assert [e["key"] for e in entries] == ["k-cli"]
+        # history series over the collected metric stays queryable
+        s = series(entries)
+        assert [v for _, v in s[("sweep", "step_p50_ms", "k-cli")]] == [10.0]
+
+
 class TestGateCLIs:
     def test_check_regression_empty_current_fails(self):
         from benchmarks import check_regression

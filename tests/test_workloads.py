@@ -1,0 +1,144 @@
+"""Multi-tenant trace workloads: determinism under a fixed seed,
+per-tenant arrival rates, tenant-mix fractions, and the skew dynamics
+the corpora are supposed to produce."""
+
+import numpy as np
+import pytest
+
+from repro.sweep.workloads import WORKLOADS, build_workload
+from repro.workloads.arrivals import (bursty_arrivals, diurnal_arrivals,
+                                      poisson_arrivals)
+from repro.workloads.corpus import ShiftingCorpus, Topic
+from repro.workloads.traces import TenantSpec, make_trace
+
+
+def _two_tenant_specs(vocab=128, rate_a=3.0, rate_b=1.0):
+    flat = Topic("broad", zipf_alpha=0.4, vocab_frac=1.0, seed=1)
+    hot = Topic("hot", zipf_alpha=3.0, vocab_frac=0.05, seed=2)
+    corpus_a = ShiftingCorpus(vocab, [flat], schedule=[(0.0, [1.0])])
+    corpus_b = ShiftingCorpus(vocab, [hot], schedule=[(0.0, [1.0])])
+    return [
+        TenantSpec("a", corpus_a, arrivals="poisson", rate=rate_a,
+                   prompt_len_mean=16.0, prompt_len_max=32,
+                   out_len_mean=4.0, out_len_max=8),
+        TenantSpec("b", corpus_b, arrivals="poisson", rate=rate_b,
+                   prompt_len_mean=16.0, prompt_len_max=32,
+                   out_len_mean=4.0, out_len_max=8),
+    ]
+
+
+# ---------------------------------------------------------------- determinism
+
+def test_make_trace_deterministic_under_fixed_seed():
+    a = make_trace(_two_tenant_specs(), horizon=60.0, seed=7)
+    b = make_trace(_two_tenant_specs(), horizon=60.0, seed=7)
+    assert len(a) == len(b) > 0
+    for ra, rb in zip(a, b):
+        assert ra.rid == rb.rid
+        assert ra.arrival == rb.arrival
+        assert ra.tenant == rb.tenant
+        assert ra.max_new_tokens == rb.max_new_tokens
+        assert np.array_equal(ra.tokens, rb.tokens)
+
+
+def test_make_trace_seed_changes_arrivals():
+    a = make_trace(_two_tenant_specs(), horizon=60.0, seed=7)
+    b = make_trace(_two_tenant_specs(), horizon=60.0, seed=8)
+    assert [r.arrival for r in a] != [r.arrival for r in b]
+
+
+def test_registered_workloads_deterministic():
+    for name in sorted(WORKLOADS):
+        a = build_workload(name, 128, horizon=20.0, rate=1.5, seed=3)
+        b = build_workload(name, 128, horizon=20.0, rate=1.5, seed=3)
+        assert len(a) == len(b) > 0, name
+        assert all(np.array_equal(x.tokens, y.tokens)
+                   and x.arrival == y.arrival and x.tenant == y.tenant
+                   for x, y in zip(a, b)), name
+
+
+# ------------------------------------------------------------- rates and mix
+
+def test_per_tenant_arrival_rate_within_tolerance():
+    rate_a, rate_b, horizon = 3.0, 1.0, 400.0
+    trace = make_trace(_two_tenant_specs(rate_a=rate_a, rate_b=rate_b),
+                       horizon=horizon, seed=0)
+    n_a = sum(r.tenant == "a" for r in trace)
+    n_b = sum(r.tenant == "b" for r in trace)
+    # Poisson(rate*horizon): sigma/mean ~ 1/sqrt(n); 15% is ~5 sigma
+    assert abs(n_a - rate_a * horizon) < 0.15 * rate_a * horizon
+    assert abs(n_b - rate_b * horizon) < 0.15 * rate_b * horizon
+
+
+def test_tenant_mix_fraction_honored():
+    trace = make_trace(_two_tenant_specs(rate_a=3.0, rate_b=1.0),
+                       horizon=400.0, seed=1)
+    frac_a = sum(r.tenant == "a" for r in trace) / len(trace)
+    assert abs(frac_a - 0.75) < 0.06
+
+
+def test_diurnal_ramp_back_loads_arrivals():
+    # period = 4x horizon turns the sinusoid into a monotone ramp, so the
+    # second half of the session must carry visibly more traffic
+    horizon = 120.0
+    rng = np.random.default_rng(0)
+    t = diurnal_arrivals(6.0, 1.0, 4.0 * horizon, horizon, rng)
+    first = int(np.sum(t < horizon / 2))
+    second = int(np.sum(t >= horizon / 2))
+    assert second > 1.15 * first      # analytic ratio ~1.38
+
+
+def test_arrival_processes_sorted_and_bounded():
+    rng = np.random.default_rng(0)
+    for t in (poisson_arrivals(2.0, 50.0, rng),
+              bursty_arrivals(1.0, 4.0, 50.0, rng),
+              diurnal_arrivals(2.0, 0.8, 60.0, 50.0, rng)):
+        assert t.size > 0
+        assert np.all(np.diff(t) >= 0)
+        assert t[0] >= 0.0 and t[-1] < 50.0
+
+
+# ------------------------------------------------------------- skew dynamics
+
+def test_fleet_shift_skew_ramps_for_chat_tenant():
+    trace = build_workload("fleet_shift", 256, horizon=40.0, rate=2.0,
+                           seed=0)
+    tenants = {r.tenant for r in trace}
+    assert tenants == {"chat", "batch"}
+    chat = [r for r in trace if r.tenant == "chat"]
+
+    def top_frac(reqs, k=13):        # mass on the top 5% of a 256 vocab
+        toks = np.concatenate([r.tokens for r in reqs])
+        counts = np.bincount(toks, minlength=256)
+        return np.sort(counts)[-k:].sum() / counts.sum()
+
+    early = [r for r in chat if r.arrival < 0.3 * 40.0]
+    late = [r for r in chat if r.arrival > 0.7 * 40.0]
+    assert len(early) >= 5 and len(late) >= 5
+    # the chat corpus walks broad -> hot, so late prompts concentrate on
+    # far fewer distinct tokens than early ones
+    assert top_frac(late) > top_frac(early) + 0.2
+
+
+def test_corpus_token_dist_tracks_schedule():
+    vocab = 128
+    flat = Topic("broad", zipf_alpha=0.4, vocab_frac=1.0, seed=1)
+    hot = Topic("hot", zipf_alpha=3.0, vocab_frac=0.05, seed=2)
+    corpus = ShiftingCorpus(vocab, [flat, hot], schedule=[
+        (0.0, [1.0, 0.0]), (10.0, [0.0, 1.0])])
+    assert corpus.token_dist(0.0).max() < corpus.token_dist(10.0).max()
+    mid = corpus.mixture(5.0)
+    assert mid == pytest.approx([0.5, 0.5])
+
+
+# ------------------------------------------------------------------- lengths
+
+def test_lengths_clamped_and_rids_ordered():
+    trace = make_trace(_two_tenant_specs(), horizon=80.0, seed=2)
+    arrivals = [r.arrival for r in trace]
+    assert arrivals == sorted(arrivals)
+    assert [r.rid for r in trace] == list(range(len(trace)))
+    for r in trace:
+        assert 1 <= len(r.tokens) <= 32
+        assert 1 <= r.max_new_tokens <= 8
+        assert r.tokens.dtype == np.int32
